@@ -1,0 +1,221 @@
+"""One benchmark per paper table/figure.  Each function prints a compact
+table and returns a dict of headline numbers; benchmarks/run.py drives all
+of them plus the roofline report.
+
+Paper artifact -> function map (DESIGN.md §6):
+  Fig 4  window CDF / breakdown      bench_windows
+  Fig 5  windows per iteration       bench_window_count
+  Fig 9  testbed reconfig timeline   bench_reconfig_timeline
+  Fig 10 OCS latency sweep (C1, C2)  bench_latency_sweep
+  Fig 11 control-plane overhead      bench_control_overhead
+  Fig 12 LLaMA-80B sweeps            bench_sim_scale
+  Fig 13 GPT-80B sweeps              bench_sim_scale
+  Fig 14 perf/cost/power scaling     bench_cost_power
+  Tab 1  parallelism traffic         bench_table1
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import get_config
+from repro.core import phases as ph
+from repro.core.windows import fraction_over, volume_class, window_cdf
+from repro.sim.costmodel import compare
+from repro.sim.opus_sim import SimParams, analytical_estimate, simulate
+from repro.sim.workload import build
+
+CFG8B = get_config("llama3_8b")
+JOB1 = ph.JobConfig(model=CFG8B, tp=4, fsdp=2, pp=2, global_batch=16,
+                    seq_len=8192)
+JOB2 = ph.JobConfig(model=CFG8B, tp=4, fsdp=8, pp=2, global_batch=64,
+                    seq_len=8192)
+JOB3 = ph.JobConfig(model=get_config("deepseek_v3_16b"), tp=4, fsdp=1,
+                    pp=4, global_batch=8, seq_len=2048)
+
+
+def bench_windows() -> Dict:
+    """Fig 4: window CDF + per-class breakdown (Exp. 1 analogue)."""
+    wl = build(JOB1, "a100")
+    r = simulate(wl, SimParams(mode="native"))
+    ws = r.windows()
+    cdf = window_cdf(ws)
+    frac = fraction_over(ws, 1e-3)
+    print("== Fig 4: inter-phase windows (Exp 1: Llama3-8B TP4/FSDP2/PP2) ==")
+    for w in ws:
+        print(f"  {w.before_dim:>5s} -> {w.after_dim:<5s} window="
+              f"{w.size*1e3:8.2f} ms  next-phase={volume_class(w.after_bytes)}"
+              f" ({w.after_bytes/1e6:.0f} MB)")
+    print(f"  fraction > 1 ms: {frac*100:.0f}%  (paper: >75%)")
+    return {"windows": len(ws), "frac_over_1ms": frac}
+
+
+def bench_window_count() -> Dict:
+    """Fig 5 / Eq. 5: windows per iteration across parallelisms."""
+    print("== Fig 5 / Eq 5: windows per iteration ==")
+    rows = []
+    for pp, m, layers in [(2, 2, 32), (4, 4, 32), (8, 8, 128), (16, 32, 126)]:
+        job = ph.JobConfig(model=CFG8B.replace(n_layers=max(layers, pp)),
+                           tp=8, fsdp=8, pp=pp, global_batch=32 * m,
+                           seq_len=8192, n_microbatch=m)
+        got = ph.count_windows(ph.iteration_schedule(job))
+        eq5 = ph.eq5_window_count(layers, m, pp)
+        rows.append((pp, m, got, eq5))
+        print(f"  PP={pp:3d} M={m:3d}: schedule={got:4d}  eq5={eq5:4d}")
+    job405 = ph.JobConfig(model=CFG8B.replace(n_layers=126), tp=8, fsdp=8,
+                          pp=16, global_batch=256, seq_len=8192,
+                          n_microbatch=32)
+    eq5 = ph.eq5_window_count(126, 32, 16)
+    print(f"  Llama3.1-405B-style (PP=16, M=32): eq5={eq5} windows/iter "
+          f"(paper: ~127, ~6/s over a ~20 s iteration)")
+    return {"eq5_405b": eq5}
+
+
+def bench_reconfig_timeline() -> Dict:
+    """Fig 9 (§5.1): testbed reconfigs/step + NIC firmware bottleneck."""
+    jobt = ph.JobConfig(model=CFG8B.replace(n_layers=6), tp=2, fsdp=2, pp=2,
+                        global_batch=2, seq_len=2048, zero3=False)
+    wl = build(jobt, "a100")
+    n = ph.count_reconfigs(wl.ops, jobt.pp)
+    nat = simulate(wl, SimParams(mode="native")).step_time
+    ocs = simulate(wl, SimParams(mode="opus", ocs_latency=0.2)).step_time
+    fw = simulate(wl, SimParams(mode="opus", ocs_latency=0.2,
+                                nic_linkup=3.0)).step_time
+    print("== Fig 9 (§5.1): hardware-testbed model ==")
+    print(f"  reconfig events/step: {n} (paper: 4, DP<->PP)")
+    print(f"  native={nat:.3f}s  +OCS(200ms)={ocs:.3f}s  "
+          f"+NIC-firmware(3s)={fw:.3f}s")
+    print("  -> firmware link-up dominates, as measured on the testbed")
+    return {"testbed_reconfigs": n}
+
+
+def bench_latency_sweep() -> Dict:
+    """Fig 10: step latency vs OCS reconfiguration latency (C1, C2)."""
+    out = {}
+    print("== Fig 10: OCS latency sweep ==")
+    for name, job in (("Config1", JOB1), ("Config2", JOB2)):
+        wl = build(job, "a100")
+        nat = simulate(wl, SimParams(mode="native")).step_time
+        print(f"  {name}: native={nat:.3f}s  "
+              f"(reconfigs={ph.count_reconfigs(wl.ops, job.pp)})")
+        for lat in (0.0, 0.01, 0.05, 0.1, 0.5, 1.0):
+            o = simulate(wl, SimParams(mode="opus", ocs_latency=lat))
+            p = simulate(wl, SimParams(mode="opus_prov", ocs_latency=lat))
+            est = analytical_estimate(wl, lat)
+            print(f"    {lat*1e3:6.0f} ms: opus={o.step_time/nat:6.3f}x  "
+                  f"+prov={p.step_time/nat:6.3f}x  naive={est/nat:6.3f}x")
+            if lat == 0.05:
+                out[f"{name}_50ms_opus"] = o.step_time / nat
+                out[f"{name}_50ms_prov"] = p.step_time / nat
+    print("  (paper @50ms: C1 1.05x/1.01x, C2 1.08x/1.02x)")
+    return out
+
+
+def bench_control_overhead() -> Dict:
+    """Fig 11: control-plane overhead at 0 ms emulated OCS latency."""
+    print("== Fig 11: control-plane overhead (0 ms OCS) ==")
+    wl2 = build(JOB2, "a100")
+    nat = simulate(wl2, SimParams(mode="native")).step_time
+    o = simulate(wl2, SimParams(mode="opus")).step_time
+    p = simulate(wl2, SimParams(mode="opus_prov")).step_time
+    print(f"  Config2 (64 GPUs): opus={100*(o/nat-1):.2f}%  "
+          f"+prov={100*(p/nat-1):.2f}%  (paper: 6.13% / 0.79%)")
+    wl3 = build(JOB3, "a100")
+    nat3 = simulate(wl3, SimParams(mode="native")).step_time
+    o3a = simulate(wl3, SimParams(mode="opus", ocs_latency=0.0))
+    o3b = simulate(wl3, SimParams(mode="opus", ocs_latency=0.1))
+    print(f"  Config3 (PP-only): reconfigs={o3a.n_reconfigs} (paper 0); "
+          f"ctrl={100*(o3a.step_time/nat3-1):.2f}% (paper 6.46%); "
+          f"latency-invariant={abs(o3b.step_time-o3a.step_time)<1e-9}")
+    return {"c2_ctrl": o / nat - 1, "c2_ctrl_prov": p / nat - 1,
+            "c3_reconfigs": o3a.n_reconfigs}
+
+
+def bench_sim_scale() -> Dict:
+    """Figs 12-13: 80B models, latency & bandwidth sweeps, 64-2048 GPUs."""
+    out = {}
+    print("== Figs 12-13: large-scale simulation (80B models) ==")
+    setups = [
+        ("LLaMA-80B/H200", get_config("llama_80b"), "h200", 8, 4, 4),
+        ("GPT-80B/GB200", get_config("gpt_80b"), "gb200", 32, 4, 4),
+    ]
+    for name, cfg, gpu, tp, dp, pp in setups:
+        job = ph.JobConfig(model=cfg, tp=tp, fsdp=dp, pp=pp,
+                           global_batch=256, seq_len=4096, n_microbatch=pp)
+        wl = build(job, gpu)
+        nat = simulate(wl, SimParams(mode="native")).step_time
+        one = simulate(wl, SimParams(mode="oneshot")).step_time
+        print(f"  {name} ({job.n_gpus} GPUs): native={nat:.3f}s "
+              f"ideal-oneshot={one/nat:.3f}x")
+        for lat in (0.01, 0.1, 1.0):
+            p = simulate(wl, SimParams(mode="opus_prov", ocs_latency=lat))
+            print(f"    lat={lat*1e3:5.0f} ms: +prov={p.step_time/nat:.4f}x "
+                  f"vs EPS, {p.step_time/one:.4f}x vs one-shot")
+            if lat == 0.1:
+                out[f"{name}_100ms"] = p.step_time / nat
+        # bandwidth sweep at 10ms
+        base_bw = wl.gpu.scale_out_gbps
+        for bw in (100, 400, 1600):
+            import dataclasses as dc
+            gpu2 = dc.replace(wl.gpu, scale_out_gbps=float(bw))
+            wl2 = dc.replace(wl, gpu=gpu2)
+            nat2 = simulate(wl2, SimParams(mode="native")).step_time
+            p2 = simulate(wl2, SimParams(mode="opus_prov",
+                                         ocs_latency=0.01)).step_time
+            print(f"    bw={bw:5d} Gbps @10ms: +prov={p2/nat2:.4f}x")
+    # DP scaling 64 -> 2048
+    print("  scaling (DP grows, TP/PP fixed):")
+    for n_gpu, dp in [(64, 4), (256, 16), (1024, 64), (2048, 128)]:
+        cfg = get_config("llama_80b")
+        job = ph.JobConfig(model=cfg, tp=8, fsdp=dp, pp=2,
+                           global_batch=16 * dp, seq_len=4096,
+                           n_microbatch=2)
+        wl = build(job, "h200")
+        nat = simulate(wl, SimParams(mode="native")).step_time
+        p = simulate(wl, SimParams(mode="opus_prov", ocs_latency=0.01))
+        print(f"    {n_gpu:5d} GPUs: +prov={p.step_time/nat:.4f}x vs EPS")
+        out[f"scale_{n_gpu}"] = p.step_time / nat
+    return out
+
+
+def bench_cost_power() -> Dict:
+    """Fig 14: networking cost & power, EPS vs photonic rails."""
+    print("== Fig 14: cost & power ==")
+    out = {}
+    for n in (128, 512):
+        c = compare(n, 8, "eps_400g")
+        print(f"  H200 {n:5d} GPUs: cost {c['cost_ratio']:.2f}x  "
+              f"power {c['power_ratio']:.2f}x "
+              f"(EPS ${c['eps_cost']/1e6:.2f}M/{c['eps_power']/1e3:.1f}kW"
+              f" -> OCS ${c['ocs_cost']/1e6:.2f}M/{c['ocs_power']/1e3:.2f}kW)")
+    out["h200"] = compare(512, 8, "eps_400g")
+    for n in (512, 2048):
+        c = compare(n, 8, "eps_800g_cpo")
+        print(f"  GB200 {n:4d} GPUs: cost {c['cost_ratio']:.2f}x  "
+              f"power {c['power_ratio']:.2f}x")
+    out["gb200"] = compare(2048, 8, "eps_800g_cpo")
+    print("  (paper: H200 4.27x/23.86x; GB200 3.17x/15.44x)")
+    return {"h200_cost": out["h200"]["cost_ratio"],
+            "h200_power": out["h200"]["power_ratio"],
+            "gb200_cost": out["gb200"]["cost_ratio"],
+            "gb200_power": out["gb200"]["power_ratio"]}
+
+
+def bench_table1() -> Dict:
+    """Table 1: per-parallelism traffic volumes for Config 1."""
+    print("== Table 1: parallelism traffic (Config 1) ==")
+    job = JOB1
+    rows = [
+        ("FSDP fwd AG /layer", ph.fsdp_ag_bytes(job)),
+        ("FSDP bwd RS /layer", ph.fsdp_rs_bytes(job)),
+        ("PP Send/Recv /microbatch", ph.pp_send_bytes(job)),
+        ("DP AR /model (plain)", ph.dp_ar_bytes(job)),
+        ("optimizer sync AR", ph.mgmt_ar_bytes(job)),
+    ]
+    for name, b in rows:
+        print(f"  {name:28s} {b/1e6:10.1f} MB/GPU")
+    return {k: v for k, v in rows}
+
+
+ALL = [bench_windows, bench_window_count, bench_reconfig_timeline,
+       bench_latency_sweep, bench_control_overhead, bench_sim_scale,
+       bench_cost_power, bench_table1]

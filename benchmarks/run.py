@@ -1,0 +1,78 @@
+"""Benchmark driver: every paper table/figure + the roofline report.
+
+    PYTHONPATH=src python -m benchmarks.run [--skip-roofline]
+
+Prints each paper artifact's reproduction and a summary block, then the
+roofline table assembled from results/dryrun/*.json (produced by
+launch/dryrun.py; cells missing from disk are reported as such, never
+recomputed here — benches must stay single-device-fast).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import sys
+from pathlib import Path
+
+from benchmarks import paper
+
+
+def roofline_report(dry_dir: str = "results/dryrun"):
+    print("\n== Roofline table (from the multi-pod dry-run) ==")
+    files = sorted(glob.glob(f"{dry_dir}/*.json"))
+    if not files:
+        print("  (no dry-run records found — run launch/dryrun.py --all)")
+        return {}
+    rows, skipped, errors = [], 0, 0
+    for f in files:
+        rec = json.loads(Path(f).read_text())
+        if rec["status"] == "skipped":
+            skipped += 1
+            continue
+        if rec["status"] != "ok":
+            errors += 1
+            continue
+        rows.append(rec["roofline"])
+    hdr = (f"  {'arch':22s} {'shape':12s} {'mesh':8s} "
+           f"{'t_comp':>8s} {'t_mem':>8s} {'t_rail':>9s} {'t_scup':>8s} "
+           f"{'bound':>10s} {'frac':>6s}")
+    print(hdr)
+    for r in sorted(rows, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
+        print(f"  {r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} "
+              f"{r['t_compute']:8.4f} {r['t_memory']:8.4f} "
+              f"{r['t_rail']:9.5f} {r['t_scaleup']:8.4f} "
+              f"{r['bottleneck']:>10s} {r['roofline_fraction']:6.3f}")
+    print(f"  cells: ok={len(rows)} skipped={skipped} errors={errors}")
+    return {"ok": len(rows), "skipped": skipped, "errors": errors}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+
+    headlines = {}
+    for fn in paper.ALL:
+        print()
+        headlines[fn.__name__] = fn()
+    if not args.skip_roofline:
+        headlines["roofline"] = roofline_report()
+
+    print("\n== headline summary ==")
+    hs = headlines.get("bench_cost_power", {})
+    ls = headlines.get("bench_latency_sweep", {})
+    co = headlines.get("bench_control_overhead", {})
+    print(f"  cost savings (H200): {hs.get('h200_cost', 0):.2f}x "
+          f"(paper 4.27x)")
+    print(f"  power savings (H200): {hs.get('h200_power', 0):.2f}x "
+          f"(paper 23.86x)")
+    print(f"  Config1 @50ms overhead: {ls.get('Config1_50ms_opus', 0):.3f}x /"
+          f" prov {ls.get('Config1_50ms_prov', 0):.3f}x (paper 1.05/1.01)")
+    print(f"  control overhead C2: {100*co.get('c2_ctrl', 0):.2f}% -> "
+          f"prov {100*co.get('c2_ctrl_prov', 0):.2f}% (paper 6.13->0.79)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,28 @@
+"""Serve a small model with batched requests on the photonic mesh:
+batch-sharded decode (decode_32k cell analogue) and context-sharded decode
+(long_500k analogue, flash-decoding split-K merge across rails).
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    print("=== batched decode, batch sharded over 4 rails ===")
+    serve_main(["--arch", "yi_9b", "--smoke", "--mesh", "4x2",
+                "--batch", "8", "--prompt-len", "12", "--gen", "20"])
+    print("\n=== long-context decode, KV cache sharded over rails ===")
+    serve_main(["--arch", "h2o_danube_3_4b", "--smoke", "--mesh", "4x2",
+                "--batch", "1", "--prompt-len", "16", "--gen", "16",
+                "--context-shard"])
+    print("\n=== attention-free decode (mamba2): zero rail traffic ===")
+    serve_main(["--arch", "mamba2_370m", "--smoke", "--mesh", "4x2",
+                "--batch", "8", "--prompt-len", "12", "--gen", "20"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""End-to-end driver: train a ~100M-param dense LM for a few hundred steps
+on the photonic fabric, with checkpoint/restart mid-run (fault tolerance)
+and an elastic reshard onto a different mesh.
+
+    PYTHONPATH=src python examples/train_end_to_end.py [--steps 300]
+
+On this CPU container a ~100M model at seq 256 runs a few steps/second;
+pass --tiny for a fast smoke variant of the same flow.
+"""
+import argparse
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+
+from repro.configs.base import get_config
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--tiny", action="store_true")
+    args = ap.parse_args()
+
+    if args.tiny:
+        arch_args = ["--arch", "yi_9b", "--smoke", "--seq", "64",
+                     "--batch", "8"]
+        steps = min(args.steps, 40)
+    else:
+        # ~100M: use the granite-moe family at its published width but
+        # reduced depth via the smoke config scaled up
+        arch_args = ["--arch", "granite_moe_1b_a400m", "--smoke",
+                     "--seq", "256", "--batch", "16"]
+        steps = args.steps
+
+    ck = "/tmp/repro_e2e_ck"
+    half = steps // 2
+    print(f"=== phase 1: {half} steps on mesh 4x2 (checkpoint at end) ===")
+    train_main(arch_args + ["--steps", str(half), "--mesh", "4x2",
+                            "--lr", "1e-3", "--ckpt", ck,
+                            "--ckpt-every", str(half)])
+    print(f"=== phase 2: simulate node loss -> elastic restart on 2x2x2 ===")
+    loss = train_main(arch_args + ["--steps", str(steps), "--mesh", "2x2x2",
+                                   "--lr", "1e-3", "--ckpt", ck, "--resume"])
+    print(f"trained {steps} steps across a mesh change; final loss {loss:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,167 @@
+"""HLO collective parsing: per-axis collective bytes from compiled text.
+
+``cost_analysis()`` gives FLOPs/bytes but NOT collective traffic, so we
+parse the (stable)HLO/optimized-HLO text: every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op contributes its operand
+bytes, attributed to a mesh axis by the structure of its replica_groups
+(or source-target pairs): with devices flattened major-to-minor over
+(pod, data, model), groups whose member stride is 1 run on `model`
+(scale-up), stride == model_size on `data` (rails), stride ==
+data*model on `pod` (cross-pod rails).
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*"                       # result var
+    r"(?:\([^)]*\)|[\w\[\]<>{}, ]+?)\s*"         # result type(s)
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\b")
+
+_SHAPE_RE = re.compile(r"\b(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|"
+                       r"u32|s16|u16|s8|u8|pred)\[([\d,]*)\]")
+
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}\}?")
+_GROUPS_ARR_RE = re.compile(r"replica_groups=\[\d+,\d+\]<=\[([\d,]+)\]"
+                            r"(?:T\(([\d,]+)\))?")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{(.*?)\}")
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    bytes_moved: int         # operand bytes per participant
+    axis: str                # "model" | "data" | "pod" | "mixed" | "unknown"
+    group_size: int
+    line: str = ""
+
+
+def _shape_bytes(line: str) -> int:
+    """Sum operand bytes on the op line (result-side shapes)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(line):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_group(line: str) -> Optional[List[int]]:
+    m = _GROUPS_RE.search(line)
+    if m:
+        body = m.group(1)
+        first = body.split("}")[0].lstrip("{")
+        try:
+            return [int(x) for x in first.split(",") if x.strip()]
+        except ValueError:
+            return None
+    m = _GROUPS_ARR_RE.search(line)
+    if m:
+        # iota format [G,S]<=[dims](T(perm)): reconstruct group 0
+        dims = [int(x) for x in m.group(1).split(",")]
+        perm = None
+        if m.group(2):
+            perm = [int(x) for x in m.group(2).split(",")]
+        gs = _GROUPS_ARR_RE.search(line)
+        hdr = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+        if not hdr:
+            return None
+        n_groups, gsize = int(hdr.group(1)), int(hdr.group(2))
+        ids = list(range(math.prod(dims)))
+        # iota over dims, transposed by perm, reshaped to [G, S]
+        import numpy as np
+        arr = np.arange(math.prod(dims)).reshape(dims)
+        if perm:
+            arr = arr.transpose(perm)
+        arr = arr.reshape(n_groups, gsize)
+        return [int(x) for x in arr[0]]
+    return None
+
+
+def _pairs(line: str) -> Optional[List[Tuple[int, int]]]:
+    idx = line.find("source_target_pairs=")
+    if idx < 0:
+        return None
+    seg = line[idx:line.find("}}", idx) + 2]
+    out = []
+    for pair in re.findall(r"\{(\d+),(\d+)\}", seg):
+        out.append((int(pair[0]), int(pair[1])))
+    return out
+
+
+def _classify_stride(members: List[int], axis_sizes: Dict[str, int]) -> str:
+    """Map a replica-group member stride to a mesh axis.
+
+    Flattened id = ((pod*data_sz)+data)*model_sz + model.
+    """
+    if len(members) < 2:
+        return "unknown"
+    strides = {members[i + 1] - members[i] for i in range(len(members) - 1)}
+    if len(strides) != 1:
+        return "mixed"
+    s = strides.pop()
+    model = axis_sizes.get("model", 1)
+    data = axis_sizes.get("data", 1)
+    if s == 1:
+        return "model"
+    if s == model:
+        return "data"
+    if s == model * data:
+        return "pod"
+    return "mixed"
+
+
+def parse_collectives(hlo_text: str, axis_sizes: Dict[str, int]
+                      ) -> List[CollectiveOp]:
+    out: List[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(2)
+        nbytes = _shape_bytes(line)
+        if kind == "collective-permute":
+            prs = _pairs(line)
+            if prs:
+                diffs = {abs(b - a) for a, b in prs[:4]}
+                axis = _classify_stride([0, min(diffs)] if diffs else [0],
+                                        axis_sizes)
+                gsize = 2
+            else:
+                axis, gsize = "unknown", 2
+        else:
+            grp = _first_group(line)
+            if grp:
+                axis = _classify_stride(grp, axis_sizes)
+                gsize = len(grp)
+            else:
+                axis, gsize = "unknown", 1
+        out.append(CollectiveOp(kind, nbytes, axis, gsize, line[:160]))
+    return out
+
+
+def collective_bytes_by_axis(hlo_text: str, axis_sizes: Dict[str, int]
+                             ) -> Dict[str, Dict[str, int]]:
+    """{axis: {kind: total bytes}} + {"total": {...}}."""
+    table: Dict[str, Dict[str, int]] = defaultdict(lambda: defaultdict(int))
+    for op in parse_collectives(hlo_text, axis_sizes):
+        table[op.axis][op.kind] += op.bytes_moved
+        table["total"][op.kind] += op.bytes_moved
+        table[op.axis]["_bytes"] += op.bytes_moved
+        table["total"]["_bytes"] += op.bytes_moved
+    return {k: dict(v) for k, v in table.items()}

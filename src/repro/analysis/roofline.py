@@ -1,0 +1,110 @@
+"""Roofline terms from the compiled dry-run (brief §ROOFLINE ANALYSIS).
+
+    compute term    = HLO_FLOPs / (chips x 197e12)       [TPU v5e bf16]
+    memory term     = HLO_bytes / (chips x 819e9)        [HBM bandwidth]
+    collective term = rail_bytes/(chips x links x 50e9)  [ICI links]
+
+HLO_FLOPs / bytes come from compiled.cost_analysis(); collective bytes are
+parsed from the compiled HLO text (analysis.hlo), attributed per axis.
+Scale-up (`model`) collectives ride intra-domain links; rail ('data'/'pod')
+collectives ride the photonic rails — the collective term reports BOTH so
+the bottleneck attribution distinguishes scale-up from rail pressure.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12         # bf16 / chip
+HBM_BW = 819e9              # bytes/s / chip
+ICI_LINK_BW = 50e9          # bytes/s / link
+ICI_LINKS = 2               # ring degree (paper: 2-degree scale-out)
+SCALEUP_LINKS = 4           # intra-domain links per chip
+
+
+@dataclass
+class Roofline:
+    """All hlo_*/\*_bytes quantities are PER-DEVICE (the compiled module is
+    the SPMD per-partition program, with while-loop trip counts applied by
+    analysis.hlo_cost).  model_flops is GLOBAL (6ND over the global batch).
+    """
+
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float             # per-device
+    hlo_bytes: float             # per-device
+    rail_bytes: float            # per-device, data+pod collectives
+    scaleup_bytes: float         # per-device, model-axis collectives
+    model_flops: float           # GLOBAL useful FLOPs
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_rail(self) -> float:
+        return self.rail_bytes / (ICI_LINKS * ICI_LINK_BW)
+
+    @property
+    def t_scaleup(self) -> float:
+        return self.scaleup_bytes / (SCALEUP_LINKS * ICI_LINK_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.t_rail + self.t_scaleup
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_bound(self) -> float:
+        """Lower bound on step time = max of the three terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (remat/redundancy waste detector).
+
+        Per-device: model_flops/chips vs the per-partition HLO count."""
+        return (self.model_flops / self.chips) / max(self.hlo_flops, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable MFU bound: useful compute time / step bound."""
+        t_useful = self.model_flops / (self.chips * PEAK_FLOPS)
+        return t_useful / max(self.step_bound, 1e-30)
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "rail_bytes": self.rail_bytes,
+            "scaleup_bytes": self.scaleup_bytes,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_rail": self.t_rail, "t_scaleup": self.t_scaleup,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def from_corrected(arch, shape, mesh_name, chips, cc, model_flops
+                   ) -> Roofline:
+    """Build from analysis.hlo_cost.CorrectedCost (per-device)."""
+    coll = cc.collective_bytes
+    rail = float(coll.get("data", {}).get("_bytes", 0)
+                 + coll.get("pod", {}).get("_bytes", 0))
+    sup = float(coll.get("model", {}).get("_bytes", 0))
+    return Roofline(arch, shape, mesh_name, chips, cc.flops,
+                    cc.bytes_accessed, rail, sup, model_flops)

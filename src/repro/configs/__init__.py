@@ -1,0 +1,23 @@
+from repro.configs.base import (
+    ASSIGNED_ARCHS,
+    ASSIGNED_SHAPES,
+    PAPER_ARCHS,
+    SHAPES,
+    EncoderConfig,
+    FrontendConfig,
+    ModelConfig,
+    MoEConfig,
+    ShapeConfig,
+    SSMConfig,
+    all_assigned_configs,
+    canonical,
+    get_config,
+    shape_applicable,
+)
+
+__all__ = [
+    "ASSIGNED_ARCHS", "ASSIGNED_SHAPES", "PAPER_ARCHS", "SHAPES",
+    "EncoderConfig", "FrontendConfig", "ModelConfig", "MoEConfig",
+    "ShapeConfig", "SSMConfig", "all_assigned_configs", "canonical",
+    "get_config", "shape_applicable",
+]

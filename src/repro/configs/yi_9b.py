@@ -1,0 +1,29 @@
+"""yi-9b [arXiv:2403.04652; hf] — llama-arch GQA.
+
+48L d_model=4096 32H (GQA kv=4) d_ff=11008 vocab=64000.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-9b",
+    family="dense",
+    n_layers=48,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=4,
+    d_ff=11008,
+    vocab_size=64000,
+    rope_theta=10000.0,
+    source="[arXiv:2403.04652; hf]",
+)
+
+SMOKE = ModelConfig(
+    name="yi-9b-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=8,
+    n_kv_heads=2,
+    d_ff=160,
+    vocab_size=512,
+)

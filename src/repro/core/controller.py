@@ -1,0 +1,132 @@
+"""Opus controller: one per job (paper §4.1).
+
+Maintains the CTR table — per communication group: sockets to shims (here:
+rank ids), group size, rail ids, in-flight operation index, and a ready
+counter.  Acts as the runtime synchronization barrier: a reconfiguration is
+forwarded to the rail orchestrators only when EVERY rank of the group has
+issued its topo_write for the same (group, idx); ACKs fan back to all
+ranks.  Timeout/retry and the giant-ring fallback implement §4.2
+"Handling Communication Faults".
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.topo import PP_DIGIT, TopoId
+from repro.core.orchestrator import RailOrchestrator
+
+
+@dataclass
+class GroupState:
+    group_id: str
+    dim: str                     # parallelism dimension name
+    digit: int                   # topo digit value (0 = PP)
+    size: int                    # participating ranks
+    rails: Tuple[int, ...]
+    ways: Tuple[int, ...]        # ways this group occupies
+    idx: int = 0                 # in-flight op index
+    ready: int = 0               # ready counter
+    waiting: List[int] = field(default_factory=list)
+
+
+@dataclass
+class WriteResult:
+    complete: bool               # barrier reached -> reconfig dispatched
+    ack_time: float = 0.0        # when ranks get ACKed (OCS done)
+    reconfigured: bool = False   # did any rail actually reprogram
+    acked_ranks: Tuple[int, ...] = ()
+
+
+class Controller:
+    """Synchronous state machine; the simulator supplies timestamps."""
+
+    def __init__(self, job_id: str, n_ways: int,
+                 orchestrators: Sequence[RailOrchestrator],
+                 timeout: float = 1.0, max_retries: int = 3):
+        self.job_id = job_id
+        self.n_ways = n_ways
+        self.orchestrators = list(orchestrators)
+        self.groups: Dict[str, GroupState] = {}
+        self.topo: Dict[int, TopoId] = {
+            o.rail_id: TopoId.uniform(n_ways, 1) for o in orchestrators}
+        self.timeout = timeout
+        self.max_retries = max_retries
+        self.n_barriers = 0
+        self.n_dispatches = 0
+        self.fallback_giant_ring = False
+        self.failure_log: List[str] = []
+
+    # -- CTR table ----------------------------------------------------------
+    def register_group(self, gs: GroupState):
+        self.groups[gs.group_id] = gs
+
+    @staticmethod
+    def n_groups(p1: int, p2: int, p3: int) -> int:
+        """Group-count identity from §4.1: P1P2 + P2P3 + P3P1."""
+        return p1 * p2 + p2 * p3 + p3 * p1
+
+    # -- topo_write barrier (paper "Runtime synchronization") ---------------
+    def topo_write(self, rank: int, group_id: str, idx: int,
+                   asym_way: int = -1, now: float = 0.0,
+                   ocs_fail: Optional[Callable[[int], bool]] = None
+                   ) -> WriteResult:
+        g = self.groups[group_id]
+        if idx != g.idx:
+            # stale write (rank ahead/behind): queue semantics collapse to
+            # asserting schedule agreement — a real deployment errors here
+            raise ValueError(
+                f"rank {rank} wrote idx {idx}, controller at {g.idx}")
+        g.ready += 1
+        g.waiting.append(rank)
+        if g.ready < g.size:
+            return WriteResult(complete=False)
+
+        # barrier reached: (1) update topo_id (2) dispatch (3) await ACKs
+        # (4) ACK ranks (5) clear counter
+        self.n_barriers += 1
+        reconfigured = False
+        ack = now
+        ways = (asym_way, asym_way + 1) if g.digit == PP_DIGIT else g.ways
+        ways = tuple(w for w in ways if 0 <= w < self.n_ways)
+        for o in self.orchestrators:
+            if o.rail_id not in g.rails:
+                continue
+            new_topo = self.topo[o.rail_id].with_ways(ways, g.digit)
+            if new_topo == self.topo[o.rail_id]:
+                continue
+            done = self._dispatch(o, new_topo, now, ocs_fail)
+            self.topo[o.rail_id] = new_topo
+            ack = max(ack, done)
+            reconfigured = True
+        acked = tuple(g.waiting)
+        g.idx += 1
+        g.ready = 0
+        g.waiting = []
+        return WriteResult(True, ack, reconfigured, acked)
+
+    def _dispatch(self, o: RailOrchestrator, topo: TopoId, now: float,
+                  ocs_fail) -> float:
+        """Forward with timeout/retry; persistent failure -> giant ring."""
+        self.n_dispatches += 1
+        for attempt in range(self.max_retries):
+            if ocs_fail is not None and ocs_fail(attempt):
+                self.failure_log.append(
+                    f"rail {o.rail_id} attempt {attempt}: timeout")
+                now += self.timeout
+                continue
+            return o.apply(self.job_id, topo, now)
+        # persistent failure: fall back to the static giant ring
+        self.fallback_giant_ring = True
+        self.failure_log.append(
+            f"rail {o.rail_id}: persistent failure -> giant ring fallback")
+        return self._apply_giant_ring(o, now)
+
+    def _apply_giant_ring(self, o: RailOrchestrator, now: float) -> float:
+        """Static circuit connecting all ranks (reduced bandwidth)."""
+        st = o.jobs[self.job_id]
+        ports = sorted(st.placement.all_ports)
+        pairs = [(ports[i], ports[(i + 1) % len(ports)])
+                 for i in range(len(ports))]
+        o.ocs.program(sorted(st.placement.all_ports), pairs, now)
+        return o.ocs.busy_until

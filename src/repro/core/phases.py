@@ -1,0 +1,351 @@
+"""Parallelism phases: Table-1 traffic model, Fig-3 schedule generation,
+phase tables, Eq-5 window counts.
+
+A *phase* is a contiguous interval during which all scale-out communication
+belongs to one parallelism dimension (paper §4.1).  The schedule generator
+reproduces Fig 3: a 1F1B pipeline over PP ways where each way's forward
+runs per-layer FSDP AllGathers (overlapped with compute), PP Send/Recv
+crosses ways at microbatch boundaries, backward emits per-layer
+ReduceScatters (+ re-gather AllGathers), and the optimizer step issues
+short synchronization AllReduces (<1 MB class, Fig 4b).
+
+Symmetric dims get digit ids 1..9 in topo_id order (DP/FSDP=1, CP=2, EP=3).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.configs.base import ModelConfig
+
+# digit assignment for symmetric dims (paper Fig 8: PP=0, then 1,2,...)
+SYM_DIGITS = {"fsdp": 1, "dp": 1, "cp": 2, "ep": 3}
+
+BYTES = {"bfloat16": 2, "float32": 4}
+
+
+@dataclass(frozen=True)
+class JobConfig:
+    """A training job's parallelism placement (paper Table 2 style)."""
+
+    model: ModelConfig
+    tp: int = 1
+    fsdp: int = 1           # FSDP/DP degree (scale-out)
+    pp: int = 1
+    cp: int = 1
+    ep: int = 1
+    global_batch: int = 16
+    seq_len: int = 8192
+    n_microbatch: Optional[int] = None  # default: = pp (paper Table 2)
+    zero3: bool = True      # FSDP (AG/RS) vs plain DP (bwd AR only)
+
+    @property
+    def microbatches(self) -> int:
+        return self.n_microbatch if self.n_microbatch else self.pp
+
+    @property
+    def n_gpus(self) -> int:
+        return self.tp * self.fsdp * self.pp * self.cp * self.ep
+
+    @property
+    def layers_per_stage(self) -> int:
+        return max(1, self.model.n_layers // self.pp)
+
+
+@dataclass(frozen=True)
+class CommOp:
+    """One communication operation as seen by the shim (paper §4.1)."""
+
+    uid: int
+    dim: str                # "fsdp" | "dp" | "pp" | "cp" | "ep" | "tp" | "mgmt"
+    kind: str               # all_gather | reduce_scatter | all_reduce | send_recv | all_to_all
+    way: int                # pipeline stage (asym way); -1 = all ways
+    microbatch: int
+    bytes_per_gpu: float
+    scale: str              # "scale_out" | "scale_up" | "mgmt"
+    compute_before: float = 0.0  # seconds of compute between prev op and this
+
+
+# ---------------------------------------------------------------------------
+# Table 1 traffic volumes (per GPU, per occurrence)
+# ---------------------------------------------------------------------------
+
+
+def param_bytes(model: ModelConfig, dtype_bytes: int = 2) -> float:
+    """Approximate parameter bytes (dense path; MoE adds expert weights)."""
+    d, f, v, L = model.d_model, model.d_ff, model.vocab_size, model.n_layers
+    dh = model.resolved_head_dim if model.n_heads else 0
+    attn = d * dh * (model.n_heads + 2 * model.n_kv_heads) + \
+        model.n_heads * dh * d
+    mlp = 3 * d * f
+    if model.moe:
+        de = model.moe.d_expert or f
+        mlp = model.moe.n_experts * 3 * d * de / 1.0 + \
+            model.moe.n_shared_experts * 3 * d * de
+        mlp = mlp / model.moe.moe_every + (3 * d * f if model.moe.moe_every > 1 else 0)
+    emb = v * d * (1 if model.tie_embeddings else 2)
+    return float((L * (attn + mlp) + emb) * dtype_bytes)
+
+
+def layer_param_bytes(job: JobConfig) -> float:
+    return param_bytes(job.model) / max(job.model.n_layers, 1)
+
+
+def fsdp_ag_bytes(job: JobConfig) -> float:
+    """Per-layer forward AllGather, bytes received per GPU (ring)."""
+    lp = layer_param_bytes(job) / (job.tp)          # TP-sharded already
+    return lp * (job.fsdp - 1) / job.fsdp
+
+
+def fsdp_rs_bytes(job: JobConfig) -> float:
+    """Per-layer backward ReduceScatter (grads in f32 -> 2x param bytes)."""
+    return 2.0 * fsdp_ag_bytes(job)
+
+
+def dp_ar_bytes(job: JobConfig) -> float:
+    """Plain-DP per-model gradient AllReduce (2(n-1)/n * grad bytes)."""
+    gb = 2.0 * param_bytes(job.model) / (job.tp * job.pp)
+    return gb * 2.0 * (job.fsdp - 1) / job.fsdp
+
+
+def pp_send_bytes(job: JobConfig) -> float:
+    """Activation Send/Recv per microbatch boundary."""
+    mb_tokens = job.global_batch // job.fsdp // job.microbatches * job.seq_len
+    return float(mb_tokens * job.model.d_model * 2 / job.tp)
+
+
+def mgmt_ar_bytes(job: JobConfig) -> float:
+    """Optimizer-step synchronization AllReduce (<1 MB class, Fig 4b)."""
+    return 64e3
+
+
+# ---------------------------------------------------------------------------
+# Fig-3 schedule generation (1F1B)
+# ---------------------------------------------------------------------------
+
+
+def one_f_one_b(pp: int, m: int) -> List[List[Tuple[int, str, int]]]:
+    """Dependency-exact 1F1B schedule, grouped by tick.
+
+    Returns ticks; each tick is [(way, "fwd"/"bwd", microbatch), ...].
+    Rules: fwd(s,m) needs fwd(s-1,m); bwd(s,m) needs bwd(s+1,m) and
+    fwd(s,m); each stage runs one op per tick, preferring bwd once its
+    warm-up (pp - s in-flight forwards) is filled (1F1B).
+    """
+    fwd_done = [[False] * m for _ in range(pp)]
+    bwd_done = [[False] * m for _ in range(pp)]
+    next_fwd = [0] * pp
+    next_bwd = [0] * pp
+    ticks: List[List[Tuple[int, str, int]]] = []
+    total = 2 * pp * m
+    done = 0
+    while done < total:
+        tick: List[Tuple[int, str, int]] = []
+        for s in range(pp):
+            can_fwd = (next_fwd[s] < m
+                       and (s == 0 or fwd_done[s - 1][next_fwd[s]]))
+            can_bwd = (next_bwd[s] < m and fwd_done[s][next_bwd[s]]
+                       and (s == pp - 1 or bwd_done[s + 1][next_bwd[s]]))
+            inflight = next_fwd[s] - next_bwd[s]
+            prefer_bwd = can_bwd and (inflight >= min(pp - s, m)
+                                      or next_fwd[s] >= m)
+            if prefer_bwd:
+                tick.append((s, "bwd", next_bwd[s]))
+            elif can_fwd:
+                tick.append((s, "fwd", next_fwd[s]))
+            elif can_bwd:
+                tick.append((s, "bwd", next_bwd[s]))
+        for s, k, mb in tick:  # commit after scheduling the whole tick
+            if k == "fwd":
+                fwd_done[s][mb] = True
+                next_fwd[s] += 1
+            else:
+                bwd_done[s][mb] = True
+                next_bwd[s] += 1
+            done += 1
+        assert tick, "1F1B deadlock"
+        ticks.append(tick)
+    return ticks
+
+
+def iteration_schedule(job: JobConfig, *, t_fwd_layer: float = 0.0,
+                       t_bwd_layer: float = 0.0) -> List[CommOp]:
+    """Scale-out CommOp sequence of one training iteration (Fig 3).
+
+    Per tick, rail traffic is emitted in dependency order:
+      [PP grad-sends feeding this tick's backwards]  -> asym phase
+      [per-layer FSDP AG/RS of this tick's fwd/bwd]  -> sym phase
+      [PP activation sends of this tick's forwards]  -> asym phase
+    Adjacent PP sub-phases across tick boundaries merge (same dim), which
+    is what produces the paper's 6 reconfigurations/step for Table-2
+    Configs 1-2 (PP=2, M=2).
+    compute_before carries the compute time preceding each op.
+    """
+    ops: List[CommOp] = []
+    uid = 0
+    L = job.layers_per_stage
+    m = job.microbatches
+
+    def emit(dim, kind, way, mb, nbytes, compute):
+        nonlocal uid
+        scale = "scale_out"
+        if dim == "tp":
+            scale = "scale_up"
+        if dim == "mgmt":
+            scale = "mgmt"
+        ops.append(CommOp(uid, dim, kind, way, mb, nbytes, scale, compute))
+        uid += 1
+
+    for tick in one_f_one_b(job.pp, m):
+        fwds = [(s, mb) for s, k, mb in tick if k == "fwd"]
+        bwds = [(s, mb) for s, k, mb in tick if k == "bwd"]
+        # (1) Send/Recv feeding this tick's consumers: the transfer
+        # completes right before the consumer starts (dependency order),
+        # so adjacent sends of the same tick batch into ONE asym phase —
+        # this is what yields 6 reconfigs/step for Table-2 Configs 1-2.
+        # the producing stage finishes its last layer's compute AFTER its
+        # last per-layer collective: that trailing compute is the idle
+        # window (§3.2) in which provisioning hides the reconfiguration.
+        # When no per-layer FSDP collectives exist (plain DP / fsdp=1) the
+        # whole stage's compute rides on the Send/Recv instead.
+        overlapped = job.zero3 and job.fsdp > 1
+        c_fwd = t_fwd_layer if overlapped else t_fwd_layer * L
+        c_bwd = t_bwd_layer if overlapped else t_bwd_layer * L
+        for i, (s, mb) in enumerate(bwds):  # grad enables bwd(s, mb)
+            if job.pp > 1 and s < job.pp - 1:
+                emit("pp", "send_recv", s, mb, pp_send_bytes(job),
+                     c_bwd if i == 0 else 0.0)
+        for i, (s, mb) in enumerate(fwds):  # activation enables fwd(s, mb)
+            if job.pp > 1 and s > 0:
+                emit("pp", "send_recv", s - 1, mb, pp_send_bytes(job),
+                     c_fwd if (i == 0 and not bwds) else 0.0)
+        # (2) symmetric traffic of this tick's compute
+        for s, mb in fwds:
+            if job.cp > 1:
+                emit("cp", "all_gather", s, mb,
+                     pp_send_bytes(job) * job.cp, 0.0)
+            if job.zero3 and job.fsdp > 1:
+                for _ in range(L):  # per-layer AG overlapped with compute
+                    emit("fsdp", "all_gather", s, mb, fsdp_ag_bytes(job),
+                         t_fwd_layer)
+        for s, mb in bwds:
+            if job.zero3 and job.fsdp > 1:
+                for _ in range(L):  # re-gather + reduce-scatter per layer
+                    emit("fsdp", "all_gather", s, mb, fsdp_ag_bytes(job),
+                         t_bwd_layer / 2)
+                    emit("fsdp", "reduce_scatter", s, mb,
+                         fsdp_rs_bytes(job), t_bwd_layer / 2)
+            if not job.zero3 and job.fsdp > 1 and mb == m - 1:
+                emit("dp", "all_reduce", s, mb, dp_ar_bytes(job),
+                     t_bwd_layer * L)
+    # optimizer step: short sync ARs (mgmt-class but rail-visible, Fig 4b);
+    # a PP-only job (fsdp == 1) has no scale-out sync group at all
+    if job.fsdp > 1:
+        for _ in range(2):
+            emit("dp" if not job.zero3 else "fsdp", "all_reduce", -1, m - 1,
+                 mgmt_ar_bytes(job), 0.0)
+    return ops
+
+
+# ---------------------------------------------------------------------------
+# phase table (paper §4.2 "Profiling Parallelism Phases")
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Phase:
+    dim: str
+    start_idx: int          # first op uid of the phase
+    end_idx: int            # last op uid (inclusive)
+    ways: Tuple[int, ...]
+
+
+def build_phase_table(ops: Iterable[CommOp]) -> List[Phase]:
+    """Group maximal runs of same-dim scale-out ops into phases.
+
+    Back-to-back PP Send/Recvs (same tick) form one phase — there is no
+    idle window between them; the shim still issues per-op topo_writes for
+    asymmetric ops (§4.2), which the controller suppresses when digits are
+    unchanged.
+    """
+    table: List[Phase] = []
+    cur: Optional[List[CommOp]] = None
+    for op in ops:
+        if op.scale != "scale_out":
+            continue
+        if cur and cur[0].dim == op.dim:
+            cur.append(op)
+        else:
+            if cur:
+                table.append(_mk_phase(cur))
+            cur = [op]
+    if cur:
+        table.append(_mk_phase(cur))
+    return table
+
+
+def _mk_phase(ops: List[CommOp]) -> Phase:
+    return Phase(ops[0].dim, ops[0].uid, ops[-1].uid,
+                 tuple(sorted({o.way for o in ops})))
+
+
+def count_windows(ops: Iterable[CommOp]) -> int:
+    """Number of inter-phase windows in one iteration (Fig 5 quantity)."""
+    return max(0, len(build_phase_table(list(ops))) - 1)
+
+
+def phase_digits(phase: Phase, digits: List[int], n_ways: int) -> List[int]:
+    """Topo digits required by a phase, given the current digits."""
+    nd = list(digits)
+    if phase.dim == "pp":
+        for w in phase.ways:
+            for x in (w, w + 1):
+                if 0 <= x < n_ways:
+                    nd[x] = 0
+    else:
+        ways = range(n_ways) if -1 in phase.ways else phase.ways
+        for x in ways:
+            if 0 <= x < n_ways:
+                nd[x] = SYM_DIGITS.get(phase.dim, 1)
+    return nd
+
+
+def count_reconfigs(ops: Iterable[CommOp], n_ways: int) -> int:
+    """Reconfiguration events per steady-state iteration (cyclic).
+
+    The topology persists across iterations, so the initial digits are the
+    LAST phase's requirement and the wrap-around transition counts.  A
+    single-dimension job (paper Config 3) therefore requires ZERO in-job
+    reconfigurations; the testbed's PP/DP alternation counts 4 (Fig 9).
+    """
+    table = build_phase_table(list(ops))
+    if not table:
+        return 0
+    # two passes: first to find the steady-state end digits, then count
+    digits = [1] * n_ways
+    for p in table:
+        digits = phase_digits(p, digits, n_ways)
+    n = 0
+    for p in table:
+        nd = phase_digits(p, digits, n_ways)
+        if nd != digits:
+            n += 1
+        digits = nd
+    return n
+
+
+def eq5_window_count(n_layer: int, n_microbatch: int, pp: int,
+                     zero3: bool = True) -> int:
+    """Closed-form window count (paper Eq. 5 / Fig 5), validated against
+    the generated schedule in tests.
+
+    FSDP x PP (1F1B): each microbatch's forward contributes an
+    (AG-phase -> PP) boundary pair and each backward a (PP -> AG/RS-phase)
+    pair; warm-up/cool-down asymmetry removes one boundary; the optimizer
+    sync ARs merge into the trailing phase.
+    """
+    if pp <= 1:
+        return 1 if zero3 else 0
+    per_mb = 4 if zero3 else 2
+    return per_mb * n_microbatch - 1

@@ -1,0 +1,202 @@
+"""Topology-ID encoding and sub-mapping decomposition (paper §4.1, Fig 8).
+
+A job's rail connectivity requirement is a ``TopoId``: one decimal digit per
+*way* (stage) of the asymmetric parallelism (PP).  Digit values:
+
+    0      -> PP owns the stage's connectivity (asymmetric Send/Recv)
+    1..9   -> symmetric parallelism #k (DP=1, CP=2, EP=3, ... job-defined)
+
+Up to 10 parallelism dimensions are supported per digit (paper §7).
+
+The orchestrator never stores the full cross-product of topologies
+(O(N_par^P_asym * N_rank)); it stores one *sub-mapping* per way
+(O(N_par * N_rank) total) and reprograms only the ways whose digit changed
+(O(N_rank / P_asym) ports per event).  ``diff_digits`` + ``affected_ways``
+implement the dispatch rules of §4.1:
+
+  (i)  symmetric<->symmetric or symmetric-owned digit change: exactly the
+       changed ways are rewired;
+  (ii) asymmetric shifts (a way toggling to/from 0) additionally rewire the
+       peer way it is pipeline-connected to.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+PP_DIGIT = 0
+
+
+@dataclass(frozen=True)
+class TopoId:
+    """digits[way] = owning parallelism for that way (index 0 = stage 0)."""
+
+    digits: Tuple[int, ...]
+
+    def __post_init__(self):
+        assert all(0 <= d <= 9 for d in self.digits), self.digits
+
+    @classmethod
+    def uniform(cls, n_ways: int, digit: int) -> "TopoId":
+        return cls(tuple([digit] * n_ways))
+
+    def encode(self) -> int:
+        """Decimal integer; digit position i = way i (way 0 least
+        significant, so int round-trips need n_ways)."""
+        out = 0
+        for d in reversed(self.digits):
+            out = out * 10 + d
+        return out
+
+    @classmethod
+    def decode(cls, value: int, n_ways: int) -> "TopoId":
+        ds = []
+        for _ in range(n_ways):
+            ds.append(value % 10)
+            value //= 10
+        assert value == 0, "encoded value wider than n_ways"
+        return cls(tuple(ds))
+
+    def with_way(self, way: int, digit: int) -> "TopoId":
+        ds = list(self.digits)
+        ds[way] = digit
+        return TopoId(tuple(ds))
+
+    def with_ways(self, ways: Sequence[int], digit: int) -> "TopoId":
+        ds = list(self.digits)
+        for w in ways:
+            ds[w] = digit
+        return TopoId(tuple(ds))
+
+    @property
+    def n_ways(self) -> int:
+        return len(self.digits)
+
+
+def diff_digits(old: TopoId, new: TopoId) -> List[int]:
+    assert old.n_ways == new.n_ways
+    return [i for i, (a, b) in enumerate(zip(old.digits, new.digits))
+            if a != b]
+
+
+def affected_ways(old: TopoId, new: TopoId) -> List[int]:
+    """Ways whose sub-mapping must be reprogrammed for old->new (§4.1).
+
+    Asymmetric-to-symmetric shift at way m also disturbs the way(s) that
+    were pipeline-connected to m (the adjacent way that was also 0).
+    """
+    changed = diff_digits(old, new)
+    out = set(changed)
+    for w in changed:
+        if old.digits[w] == PP_DIGIT and new.digits[w] != PP_DIGIT:
+            # leaving PP: the previously-connected neighbour way(s)
+            for nb in (w - 1, w + 1):
+                if 0 <= nb < old.n_ways and old.digits[nb] == PP_DIGIT:
+                    out.add(nb)
+    return sorted(out)
+
+
+# ---------------------------------------------------------------------------
+# port maps / sub-mappings
+# ---------------------------------------------------------------------------
+
+PortPair = Tuple[int, int]
+
+
+@dataclass(frozen=True)
+class SubMapping:
+    """Port wiring for one way of one job on one rail.
+
+    ``pairs`` is a directed matching: (src_port -> dst_port).  A ring over
+    ports (p0, p1, ..., pk) is the pairs (p0,p1),(p1,p2),...,(pk,p0).
+    """
+
+    way: int
+    owner_digit: int
+    pairs: Tuple[PortPair, ...]
+
+    @property
+    def ports(self) -> FrozenSet[int]:
+        out = set()
+        for a, b in self.pairs:
+            out.add(a)
+            out.add(b)
+        return frozenset(out)
+
+
+def ring_pairs(ports: Sequence[int]) -> Tuple[PortPair, ...]:
+    n = len(ports)
+    if n <= 1:
+        return ()
+    return tuple((ports[i], ports[(i + 1) % n]) for i in range(n))
+
+
+@dataclass
+class JobPlacement:
+    """Which rail ports belong to which (way, symmetric-group) of a job.
+
+    ports_by_way[way] = ordered ports of that pipeline stage on this rail.
+    sym_groups[k][way] = list of port-groups; each group forms one ring for
+    symmetric parallelism k restricted to that way (e.g. the DP group).
+    """
+
+    job_id: str
+    ports_by_way: Tuple[Tuple[int, ...], ...]
+    sym_groups: Dict[int, Dict[int, List[Tuple[int, ...]]]]
+
+    @property
+    def n_ways(self) -> int:
+        return len(self.ports_by_way)
+
+    @property
+    def all_ports(self) -> FrozenSet[int]:
+        return frozenset(p for way in self.ports_by_way for p in way)
+
+
+def build_submapping(placement: JobPlacement, topo: TopoId,
+                     way: int) -> SubMapping:
+    """The port wiring of one way under ``topo``.
+
+    Symmetric digit k: one ring per sym-group of dim k within the way.
+    PP digit: each port pairs with the same-index port of the next PP-owned
+    way (activation Send/Recv circuits).
+    """
+    d = topo.digits[way]
+    if d != PP_DIGIT:
+        pairs: List[PortPair] = []
+        for grp in placement.sym_groups[d][way]:
+            pairs.extend(ring_pairs(grp))
+        return SubMapping(way, d, tuple(pairs))
+    # PP: connect to the adjacent PP-owned way (forward direction)
+    nxt = way + 1
+    pairs = []
+    if nxt < placement.n_ways and topo.digits[nxt] == PP_DIGIT:
+        a = placement.ports_by_way[way]
+        b = placement.ports_by_way[nxt]
+        pairs = [(x, y) for x, y in zip(a, b)]
+    return SubMapping(way, PP_DIGIT, tuple(pairs))
+
+
+def full_mapping(placement: JobPlacement, topo: TopoId) -> List[SubMapping]:
+    return [build_submapping(placement, topo, w)
+            for w in range(placement.n_ways)]
+
+
+# ---------------------------------------------------------------------------
+# storage accounting (paper §4.1 "Sub-mapping decomposition")
+# ---------------------------------------------------------------------------
+
+
+def naive_storage(n_parallel: int, p_asym: int, n_rank: int) -> int:
+    """All possible full mappings: O(N_parallel^P_asym * N_rank)."""
+    return (n_parallel ** p_asym) * n_rank
+
+
+def opus_storage(n_parallel: int, p_asym: int, n_rank: int) -> int:
+    """Per-way sub-mappings: O(N_parallel * N_rank)."""
+    return n_parallel * n_rank
+
+
+def ports_per_event(n_rank: int, p_asym: int) -> int:
+    """Ports reprogrammed per reconfiguration event: O(N_rank / P_asym)."""
+    return max(1, n_rank // max(p_asym, 1))

@@ -1,0 +1,102 @@
+"""Pallas TPU flash-decode: one query token against a long KV cache.
+
+The cache dimension is the grid's sequential axis; each step loads a
+[block_k, dh] cache tile into VMEM and folds it into running (m, l, acc)
+statistics held in VMEM scratch, i.e. the classic flash-decoding split-K
+scheme mapped onto the TPU memory hierarchy (HBM -> VMEM tiles -> VREG
+reductions).  GQA reads the kv head via the BlockSpec index_map, and the
+query block is the [rep, dh] bundle of query heads sharing one kv head, so
+the MXU contraction is [rep, dh] @ [dh, block_k].
+
+Used by the decode_32k / long_500k serve cells; validated against
+``ref.decode_attention`` in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import ref
+
+NEG_INF = ref.NEG_INF
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, m_scr, l_scr,
+                   acc_scr, *, scale: float, nk: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale              # [rep, dh]
+    k = k_ref[0, 0].astype(jnp.float32)                      # [bk, dh]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [rep, bk]
+    vmask = valid_ref[0] != 0                                # [bk]
+    s = jnp.where(vmask[None, :], s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, -1, keepdims=True)
+    v = v_ref[0, 0].astype(jnp.float32)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _flush():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, valid_mask, *,
+                     scale: Optional[float] = None, block_k: int = 1024,
+                     interpret: bool = False) -> jnp.ndarray:
+    """q [B,1,H,dh]; k/v_cache [B,C,KV,dh]; valid_mask [B,C] -> [B,1,H,dh]."""
+    b, _, h, dh = q.shape
+    c, kvh = k_cache.shape[1], k_cache.shape[2]
+    rep = h // kvh
+    scale = scale if scale is not None else 1.0 / (dh ** 0.5)
+    block_k = min(block_k, c)
+    if c % block_k:
+        return ref.decode_attention(q, k_cache, v_cache, valid_mask,
+                                    scale=scale)
+    nk = c // block_k
+
+    qt = q.reshape(b, kvh, rep, dh)                         # [B,KV,rep,dh]
+    kt = jnp.transpose(k_cache, (0, 2, 1, 3))               # [B,KV,C,dh]
+    vt = jnp.transpose(v_cache, (0, 2, 1, 3))
+    vm = valid_mask.astype(jnp.int32)                       # [B,C]
+
+    kernel = functools.partial(_decode_kernel, scale=scale, nk=nk)
+    o = pl.pallas_call(
+        kernel,
+        grid=(b, kvh, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, dh), lambda b_, g, ik: (b_, g, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, dh), lambda b_, g, ik: (b_, g, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, dh), lambda b_, g, ik: (b_, g, ik, 0)),
+            pl.BlockSpec((1, block_k), lambda b_, g, ik: (b_, ik)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, dh), lambda b_, g, ik: (b_, g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, rep, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, dh), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qt, kt, vt, vm)
+    return o.reshape(b, 1, h, dh)

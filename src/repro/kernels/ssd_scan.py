@@ -1,0 +1,122 @@
+"""Pallas TPU kernel for the Mamba-2 SSD chunked scan.
+
+TPU co-design (vs the paper's CUDA SSD kernel): the chunk dimension is the
+grid's sequential axis and the [P, N] state is carried across chunks in a
+VMEM scratch accumulator — the TPU analogue of the GPU version keeping state
+in registers/shared memory across a threadblock loop.  All O(L^2) and
+O(L*P*N) work inside a chunk is expressed as dense dots for the MXU:
+
+    intra:  W = (C B^T) * exp(segsum) * dt      ->  Y_intra = W @ X
+    inter:  Y_inter = (C @ state^T) * exp(cumsum dA)
+    state:  state' = exp(sum dA) * state + (X * dt * decay)^T @ B
+
+The group-to-head broadcast (n_groups G < H) happens through the B/C
+BlockSpec index_map (head h reads group h // (H//G)) — never materialized.
+Chunk decays use cumsum differences; the jnp oracle (models.ssm.ssd_chunked)
+uses the masked-cumsum segment sum, and the two are asserted allclose in
+tests over shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _ssd_kernel(x_ref, dt_ref, da_ref, b_ref, c_ref, y_ref, st_ref,
+                state_scr, *, nc: int, chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)        # [L, P]
+    dt = dt_ref[0, 0].astype(jnp.float32)      # [L]
+    da = da_ref[0, 0].astype(jnp.float32)      # [L] = dt * a_h
+    bm = b_ref[0, 0].astype(jnp.float32)       # [L, N]
+    cm = c_ref[0, 0].astype(jnp.float32)       # [L, N]
+
+    cs = jnp.cumsum(da)                        # [L]
+    state_in = state_scr[...]                  # [P, N]
+
+    # ---- intra-chunk ----
+    li = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    seg = jnp.where(li >= lj, cs[:, None] - cs[None, :], NEG_INF)
+    w = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [L, L]
+    w = w * jnp.exp(seg) * dt[None, :]
+    y = jax.lax.dot(w, x, preferred_element_type=jnp.float32)    # [L, P]
+
+    # ---- inter-chunk read of the carried state ----
+    y = y + jax.lax.dot_general(cm, state_in, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) \
+        * jnp.exp(cs)[:, None]
+
+    # ---- state update ----
+    decay_to_end = jnp.exp(cs[-1] - cs)        # [L]
+    xw = x * (dt * decay_to_end)[:, None]      # [L, P]
+    state_scr[...] = jnp.exp(cs[-1]) * state_in + jax.lax.dot_general(
+        xw, bm, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ic == nc - 1)
+    def _flush():
+        st_ref[0, 0] = state_scr[...].astype(st_ref.dtype)
+
+
+def ssd(x, dt, a, b_mat, c_mat, chunk: int, h_init=None,
+        interpret: bool = False):
+    """Pallas SSD.  Same contract as models.ssm.ssd_chunked.
+
+    x [B,S,H,P], dt [B,S,H], a [H], b/c [B,S,G,N] ->
+      (y [B,S,H,P], final_state [B,H,P,N]).
+    h_init falls back to the jnp oracle (prefill continuation path).
+    """
+    if h_init is not None:
+        from repro.models.ssm import ssd_chunked
+        return ssd_chunked(x, dt, a, b_mat, c_mat, chunk, h_init=h_init)
+    bsz, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    rep = h // g
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    xt = jnp.transpose(x, (0, 2, 1, 3))                     # [B,H,S,P]
+    dtt = jnp.transpose(dt, (0, 2, 1))                      # [B,H,S]
+    dat = dtt * a[None, :, None]                            # [B,H,S]
+    bt = jnp.transpose(b_mat, (0, 2, 1, 3))                 # [B,G,S,N]
+    ct = jnp.transpose(c_mat, (0, 2, 1, 3))
+
+    kernel = functools.partial(_ssd_kernel, nc=nc, chunk=chunk)
+    y, st = pl.pallas_call(
+        kernel,
+        grid=(bsz, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda b_, h_, ic: (b_, h_, ic, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b_, h_, ic: (b_, h_, ic)),
+            pl.BlockSpec((1, 1, chunk), lambda b_, h_, ic: (b_, h_, ic)),
+            pl.BlockSpec((1, 1, chunk, n), lambda b_, h_, ic: (b_, h_ // rep, ic, 0)),
+            pl.BlockSpec((1, 1, chunk, n), lambda b_, h_, ic: (b_, h_ // rep, ic, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda b_, h_, ic: (b_, h_, ic, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda b_, h_, ic: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, h, s, p), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(xt, dtt, dat, bt, ct)
+    return jnp.transpose(y, (0, 2, 1, 3)), st

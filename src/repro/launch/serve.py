@@ -1,0 +1,70 @@
+"""Serving driver: batched prefill + decode on the photonic mesh.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch yi_9b --smoke \
+        --mesh 4x2 --batch 8 --prompt-len 12 --gen 20
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.launch.train import parse_mesh
+from repro.models import transformer as tf
+from repro.serve.step import (ServeSetup, init_serve_state, make_decode_step,
+                              make_prefill_step)
+from repro.train.step import TrainSetup, init_sharded_state
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--mesh", default="4x2")
+    ap.add_argument("--fabric", default="photonic")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--context-shard", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    mesh = parse_mesh(args.mesh)
+    rng = jax.random.PRNGKey(0)
+    tpl = jax.eval_shape(lambda: tf.init_lm(rng, cfg))
+    cap = args.prompt_len + args.gen
+
+    with jax.set_mesh(mesh):
+        params, _, _ = init_sharded_state(
+            TrainSetup(cfg=cfg, fabric=args.fabric), mesh, rng)
+        ssetup = ServeSetup(cfg=cfg, fabric=args.fabric,
+                            context_shard=args.context_shard)
+        state = init_serve_state(ssetup, mesh, params, args.batch, cap)
+        decode = jax.jit(make_decode_step(ssetup, mesh, tpl,
+                                          batch=args.batch, capacity=cap))
+        prompts = jax.random.randint(rng, (args.batch, args.prompt_len), 0,
+                                     cfg.vocab_size, jnp.int32)
+        # teacher-forced prefill through the decode path (cache build)
+        tok = prompts[:, :1]
+        t0 = time.time()
+        for t in range(args.prompt_len):
+            logits, state = decode(params, state, prompts[:, t:t + 1],
+                                   jnp.int32(t))
+        out = []
+        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+        for t in range(args.prompt_len, cap):
+            logits, state = decode(params, state, tok, jnp.int32(t))
+            tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+            out.append(tok)
+        dt = time.time() - t0
+        toks = args.batch * cap
+        print(f"served {args.batch} seqs x {cap} steps in {dt:.2f}s "
+              f"({toks/dt:.1f} tok/s aggregate)")
+        print("sample continuation:", [int(x[0, 0]) for x in out[:10]])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Core layers: norms, RoPE, gated MLPs, initializers.
+
+Pure-functional JAX; params are plain pytrees of jnp arrays.  All matmul
+weights carry their natural (in_dim, ..., out_dim) layout so the sharding
+rules in ``repro.parallel.sharding`` can address dims by position.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, in_axis_size=None):
+    """LeCun-normal style init; fan-in taken from shape[0] unless given."""
+    fan_in = in_axis_size if in_axis_size is not None else shape[0]
+    std = 1.0 / jnp.sqrt(jnp.maximum(fan_in, 1)).astype(jnp.float32)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    """Vocab padded to a multiple of 256 so it shards over any mesh axis."""
+    return ((cfg.vocab_size + 255) // 256) * 256
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, w, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def rms_norm_init(d):
+    # zero-centered scale (gemma-style "1 + w")
+    return jnp.zeros((d,), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_apply(x, positions, theta: float):
+    """Apply rotary embedding.
+
+    x: [..., S, H, dh]  positions: broadcastable to [..., S] (int32)
+    """
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freq  # [..., S, half]
+    sin = jnp.sin(ang)[..., None, :]  # [..., S, 1, half]
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:2 * half]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([r1, r2, x[..., 2 * half:]], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), dtype),
+    }
+
+
+def mlp_apply(p, x, act: str = "swiglu"):
+    g = jnp.einsum("...d,df->...f", x, p["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, p["w_up"])
+    if act == "geglu":
+        g = jax.nn.gelu(g, approximate=True)
+    else:
+        g = jax.nn.silu(g)
+    return jnp.einsum("...f,fd->...d", g * u, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits, targets, vocab_size: int, z_loss: float = 1e-4):
+    """Token CE with padded-vocab masking and z-loss. logits [..., Vp]."""
+    lg = logits.astype(jnp.float32)
+    vp = lg.shape[-1]
+    if vp > vocab_size:
+        neg = jnp.full((vp - vocab_size,), -1e9, jnp.float32)
+        lg = lg + jnp.concatenate([jnp.zeros((vocab_size,), jnp.float32), neg])
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, targets[..., None], axis=-1)[..., 0]
+    ce = lse - gold
+    zl = z_loss * jnp.square(lse)
+    return jnp.mean(ce + zl), jnp.mean(ce)

@@ -1,0 +1,208 @@
+"""Per-leaf sharding rules: FSDP (rail axes) × TP/EP (scale-up `model` axis).
+
+Production layout (paper Fig 1 mapped to the TPU mesh, see DESIGN.md §4):
+  * `model` axis (16) = scale-up domain: TP for attention/FFN dims, EP for
+    expert dims, vocab sharding for embed/unembed.  GSPMD-auto everywhere.
+  * `data` axis (16) = the photonic rails: FSDP-shards every parameter leaf
+    along its largest rail-divisible dim (ZeRO-3), batch-shards activations.
+  * `pod` axis (2, multi-pod) = cross-pod data parallelism (HSDP): params
+    replicated across pods, gradients synchronized with an explicit —
+    and compressible — cross-pod ring AllReduce (paper's DP phase).
+
+Rules are name-based over the parameter tree produced by
+``models.transformer.init_lm``; stacked layer leaves carry a leading
+[n_periods] dim which is never sharded (it is the scan axis).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+MODEL_AXIS = "model"
+
+# name pattern -> preferred TP dim candidates (index into the *unstacked*
+# shape; negative ok).  First candidate whose size divides the model axis
+# wins; otherwise the leaf is replicated over `model`.
+_TP_RULES: Tuple[Tuple[str, Tuple[int, ...]], ...] = (
+    # [§Perf H2 iter 2 — REFUTED: replicating embed over model raised the
+    # rail gather bytes without touching the dominant AR (which was the
+    # MoE combine, iter 3); vocab sharding retained]
+    (r"\bembed$", (0,)),            # vocab-sharded lookup table
+    (r"\bunembed$", (1,)),          # vocab-sharded output projection
+    (r"\bfrontend_proj$", (1,)),
+    (r"\brouter$", (1,)),           # expert dim
+    (r"moe/.*\bw_(gate|up|down)$", (0,)),   # E dim => expert parallelism
+    (r"\bw_(gate|up)$", (1,)),      # d_ff
+    (r"\bw_down$", (0,)),           # d_ff
+    (r"\bwq$", (1, 2)),             # heads, else head_dim
+    # kv projections: shard ONLY on whole kv heads.  Sharding head_dim
+    # (the old fallback for kv_heads % model != 0) made GSPMD reshard
+    # q/k/v between incompatible layouts every layer ("involuntary full
+    # rematerialization") — Megatron-style KV replication is cheaper:
+    # wk/wv are small, and attention then needs no resharding.
+    # [§Perf H2: granite train_4k t_scaleup 1.38s -> see EXPERIMENTS.md]
+    (r"\bw[kv]$", (1,)),            # kv heads or replicate
+    (r"\bwo$", (0, 1)),
+    (r"\bw_in$", (1,)),             # ssm fused in-proj columns
+    (r"\bw_out$", (0,)),            # d_inner
+    (r"\bconv_w$", (1,)),
+    (r"\b(a_log|dt_bias|d_skip)$", (0,)),
+    (r"\bnorm", ()),                # norms replicated over model
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+    return "/".join(parts)
+
+
+def _is_moe_leaf(pstr: str) -> bool:
+    # routed-expert weights live under layers/<pos>/ffn with a leading E dim;
+    # distinguish from dense mlp by rank at call site instead.
+    return "ffn" in pstr and "shared" not in pstr
+
+
+def tp_dim(pstr: str, shape, model_size: int) -> Optional[int]:
+    """TP dim for an (unstacked) leaf shape, or None."""
+    name = pstr.split("/")[-1]
+    moe3d = _is_moe_leaf(pstr) and name in ("w_gate", "w_up", "w_down") \
+        and len(shape) == 3
+    for pat, cands in _TP_RULES:
+        target = ("moe/" + name) if moe3d else name
+        if re.search(pat, target if "moe/" in pat else name):
+            for c in cands:
+                c = c % len(shape) if shape else 0
+                if c < len(shape) and shape[c] % model_size == 0:
+                    return c
+            return None
+    return None
+
+
+def fsdp_dim(shape, n_rails: int, exclude: Optional[int]) -> Optional[int]:
+    """Largest rail-divisible dim (excluding the TP dim), else None."""
+    best, best_size = None, 0
+    for i, s in enumerate(shape):
+        if i == exclude:
+            continue
+        if s % n_rails == 0 and s > best_size:
+            best, best_size = i, s
+    return best
+
+
+def leaf_spec(pstr: str, shape, *, n_rails: int, rail_axes, model_size: int,
+              stacked: bool):
+    """(PartitionSpec, fsdp_dim, tp_dim) for one leaf.
+
+    ``stacked`` leaves have a leading n_periods dim (never sharded); dims in
+    the returned spec refer to the full (stacked) shape.
+    """
+    base = shape[1:] if stacked else shape
+    td = tp_dim(pstr, base, model_size)
+    fd = fsdp_dim(base, n_rails, td)
+    off = 1 if stacked else 0
+    spec = [None] * len(shape)
+    if td is not None:
+        spec[td + off] = MODEL_AXIS
+    if fd is not None:
+        spec[fd + off] = rail_axes if len(rail_axes) > 1 else rail_axes[0]
+    return (P(*spec),
+            None if fd is None else fd + off,
+            None if td is None else td + off)
+
+
+def _walk(params, fn):
+    """Map fn(pstr, leaf, stacked) over the tree, preserving structure."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        pstr = _path_str(path)
+        stacked = pstr.startswith("layers") or "/layers/" in pstr
+        out.append(fn(pstr, leaf, stacked))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def param_specs(params, *, rail_axes: Tuple[str, ...], n_rails: int,
+                model_size: int):
+    """PartitionSpec tree for GSPMD placement of the stored parameters."""
+    return _walk(params, lambda pstr, leaf, st: leaf_spec(
+        pstr, leaf.shape, n_rails=n_rails, rail_axes=rail_axes,
+        model_size=model_size, stacked=st)[0])
+
+
+def param_fsdp_dims(params, *, rail_axes, n_rails: int, model_size: int):
+    """Tree of fsdp dim index (or None) per leaf — drives manual in_specs."""
+    return _walk(params, lambda pstr, leaf, st: leaf_spec(
+        pstr, leaf.shape, n_rails=n_rails, rail_axes=rail_axes,
+        model_size=model_size, stacked=st)[1])
+
+
+def param_tp_specs(params, *, rail_axes, n_rails: int, model_size: int):
+    """Bare model-axis PartitionSpec tree (constraints inside shard_map)."""
+
+    def fn(pstr, leaf, st):
+        _, _, td = leaf_spec(pstr, leaf.shape, n_rails=n_rails,
+                             rail_axes=rail_axes, model_size=model_size,
+                             stacked=st)
+        spec = [None] * leaf.ndim
+        if td is not None:
+            spec[td] = MODEL_AXIS
+        return P(*spec)
+
+    return _walk(params, fn)
+
+
+def manual_in_specs(fsdp_dims_tree, params, rail_axes):
+    """PartitionSpec tree mentioning only the (manual) rail axes."""
+    ra = rail_axes if len(rail_axes) > 1 else rail_axes[0]
+
+    def fn(fd, leaf):
+        spec = [None] * leaf.ndim
+        if fd is not None:
+            spec[fd] = ra
+        return P(*spec)
+
+    return jax.tree_util.tree_map(fn, fsdp_dims_tree, params,
+                                  is_leaf=lambda x: x is None)
+
+
+# ---------------------------------------------------------------------------
+# activation constraint hook
+# ---------------------------------------------------------------------------
+
+_LOGICAL = {
+    "batch": "RAILS", "heads": MODEL_AXIS, "kv": MODEL_AXIS,
+    "ff": MODEL_AXIS, "experts": MODEL_AXIS, "vocab": MODEL_AXIS,
+    "groups": "RAILS", "seq": None, "embed": None, None: None,
+}
+
+
+def make_csp(rail_axes: Tuple[str, ...], *, manual_rails: bool):
+    """Sharding-constraint hook ``csp(x, *logical_names)``.
+
+    manual_rails=True (photonic shard_map): rail-logical dims are already
+    local — only model-axis constraints are emitted (bare PartitionSpec).
+    """
+    ra = rail_axes if len(rail_axes) > 1 else rail_axes[0]
+
+    def csp(x, *names):
+        spec = []
+        for n in names:
+            ax = _LOGICAL.get(n, None)
+            if ax == "RAILS":
+                spec.append(None if manual_rails else ra)
+            else:
+                spec.append(ax)
+        if all(s is None for s in spec):
+            return x
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+
+    return csp

@@ -1,0 +1,99 @@
+"""Network cost & power model (paper Fig 14).
+
+Components follow the paper's citations ([16-18, 44, 52, 63]); prices and
+powers are public list-price class numbers.  The comparison replaces, per
+rail, the electrical packet switch + its switch-side optical transceivers
+with an OCS (passive optical datapath: no ASIC, no transceivers, no DSP).
+Server-side (NIC) optics exist identically in both designs and are
+excluded, as are fiber cables (Fig 14 caption).
+
+Fabrics:
+  eps_h200   per-rail electrical: 64x400G Tomahawk-class switch [17]
+             + 400G-XDR4 transceiver per port [16]
+  eps_gb200  co-packaged-optics 800G switch (Quantum-X800 class [44,52]);
+             CPO integrates optics: no pluggables, but the ASIC+laser
+             power/cost per port is higher
+  ocs        Polatis/Coherent-class OCS [63,13]: ~$100k per 384-port
+             chassis, 45-75 W total (drive electronics only)
+
+Scaling: one rail per scale-up-domain rank; rail size = #domains; switches
+per rail = ceil(rail_size / ports_per_switch) (single-tier within the
+paper's 128-2,048 GPU range; beyond 18K GPUs per rail see §7).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict
+
+
+@dataclass(frozen=True)
+class SwitchPart:
+    name: str
+    ports: int
+    cost: float              # $ per switch chassis
+    power: float             # W per chassis (ASIC + fans, no optics)
+    optics_cost: float       # $ per port (switch-side transceiver / CPO)
+    optics_power: float      # W per port
+
+
+PARTS: Dict[str, SwitchPart] = {
+    # FS N9510-64D 64x400G (Tomahawk-4) [17] + 400G XDR4 pluggable [16]
+    "eps_400g": SwitchPart("eps_400g", 64, 32_000.0, 1_100.0, 800.0, 8.0),
+    # Quantum-X800-class 144x800G CPO switch [44, 52, 8]
+    "eps_800g_cpo": SwitchPart("eps_800g_cpo", 144, 280_000.0, 3_500.0,
+                               0.0, 7.0),
+    # Polatis 6000n / Coherent liquid-crystal OCS [63, 13]: passive
+    # datapath, ~$300/port, ~1 W/port drive electronics
+    "ocs": SwitchPart("ocs", 384, 117_000.0, 400.0, 0.0, 0.0),
+}
+
+# an 800G link occupies two OCS fiber ports (2x400G lambdas); 400G one
+OCS_PORTS_PER_LINK = {"eps_400g": 1, "eps_800g_cpo": 2}
+
+
+@dataclass(frozen=True)
+class FabricBill:
+    n_gpus: int
+    fabric: str
+    n_switches: int
+    cost: float
+    power: float
+
+    @property
+    def cost_per_gpu(self) -> float:
+        return self.cost / self.n_gpus
+
+    @property
+    def power_per_gpu(self) -> float:
+        return self.power / self.n_gpus
+
+
+def rail_fabric(n_gpus: int, domain: int, part_name: str,
+                ports_per_link: int = 1) -> FabricBill:
+    """Bill of materials for a rail-optimized scale-out fabric."""
+    part = PARTS[part_name]
+    rails = domain                      # one rail per local rank
+    rail_size = (n_gpus // domain) * ports_per_link  # ports per rail
+    per_rail_switches = math.ceil(rail_size / part.ports)
+    n_sw = rails * per_rail_switches
+    # switch cost amortized by port utilization (partial chassis are
+    # fractionally billed, matching per-port list pricing practice)
+    used_frac = rail_size / (per_rail_switches * part.ports)
+    cost = n_sw * part.cost * used_frac \
+        + rails * rail_size * part.optics_cost
+    power = n_sw * part.power * used_frac \
+        + rails * rail_size * part.optics_power
+    return FabricBill(n_gpus, part_name, n_sw, cost, power)
+
+
+def compare(n_gpus: int, domain: int, eps_part: str) -> Dict[str, float]:
+    eps = rail_fabric(n_gpus, domain, eps_part)
+    ocs = rail_fabric(n_gpus, domain, "ocs",
+                      ports_per_link=OCS_PORTS_PER_LINK.get(eps_part, 1))
+    return {
+        "eps_cost": eps.cost, "ocs_cost": ocs.cost,
+        "eps_power": eps.power, "ocs_power": ocs.power,
+        "cost_ratio": eps.cost / ocs.cost,
+        "power_ratio": eps.power / ocs.power,
+    }

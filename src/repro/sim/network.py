@@ -1,0 +1,139 @@
+"""Reconfigurable analytical network backend (paper §5.3's AstraSim
+extension, re-implemented natively).
+
+The backend holds a set of candidate circuit configurations — directed
+bandwidth matrices indexed by topology ID (zero entries = absent circuits).
+The active matrix changes as Opus selects configurations at runtime; base
+link latency and reconfiguration latency apply uniformly.  Correctness
+semantics reproduced from the paper:
+
+  * a reconfiguration request is REJECTED while any collective is in
+    flight on the affected links, or while another reconfiguration is
+    pending (G1/G2 surface here as hard errors);
+  * accepted reconfigurations drain active links before applying;
+  * traffic arriving during a reconfiguration interval queues and is
+    released on completion.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class NetConfig:
+    n_ranks: int
+    link_gbps: float
+    base_latency: float = 5e-6
+    reconfig_latency: float = 0.0
+
+
+class ReconfigurableBackend:
+    """Time-stepped fabric: one active bandwidth matrix at a time."""
+
+    def __init__(self, cfg: NetConfig,
+                 candidates: Dict[int, np.ndarray]):
+        self.cfg = cfg
+        self.candidates = {k: np.asarray(v, dtype=float)
+                           for k, v in candidates.items()}
+        for k, m in self.candidates.items():
+            assert m.shape == (cfg.n_ranks, cfg.n_ranks), (k, m.shape)
+        self.active_id: Optional[int] = None
+        self.active: np.ndarray = np.zeros((cfg.n_ranks, cfg.n_ranks))
+        self.inflight: int = 0
+        self.reconfig_until: float = -1.0
+        self.queue: List[Tuple[float, float]] = []  # (arrival, duration)
+        self.n_reconfigs = 0
+        self.n_rejections = 0
+
+    # -- reconfiguration ----------------------------------------------------
+    def reconfigure(self, topo_id: int, now: float) -> float:
+        """Switch the active matrix.  Returns completion time."""
+        if self.inflight > 0:
+            self.n_rejections += 1
+            raise RuntimeError(
+                "G2 violation: reconfigure with collective in flight")
+        if now < self.reconfig_until:
+            self.n_rejections += 1
+            raise RuntimeError(
+                "reconfigure while another reconfiguration pending")
+        if topo_id == self.active_id:
+            return now  # no-op (O1 suppression downstream)
+        # drain is implicit: inflight == 0
+        self.active_id = topo_id
+        self.active = self.candidates[topo_id]
+        self.reconfig_until = now + self.cfg.reconfig_latency
+        self.n_reconfigs += 1
+        return self.reconfig_until
+
+    # -- traffic ------------------------------------------------------------
+    def transfer(self, src: int, dst: int, nbytes: float,
+                 now: float) -> float:
+        """Point-to-point transfer on the active circuit.  Returns end
+        time.  Arrivals during reconfiguration queue until it completes."""
+        start = max(now, self.reconfig_until)
+        bw = self.active[src, dst]
+        if bw <= 0:
+            raise RuntimeError(f"no circuit {src}->{dst} in topo "
+                               f"{self.active_id}")
+        dur = self.cfg.base_latency + nbytes * 8.0 / (bw * 1e9)
+        self.inflight += 1
+        return start + dur
+
+    def complete(self):
+        assert self.inflight > 0
+        self.inflight -= 1
+
+    def ring_collective(self, ranks: List[int], bytes_per_rank: float,
+                        now: float) -> float:
+        """Duration of a ring collective over `ranks` on active circuits.
+
+        Validates every hop exists (circuit-legality check), then applies
+        the bandwidth-optimal ring time at the slowest link.
+        """
+        n = len(ranks)
+        if n <= 1:
+            return now
+        start = max(now, self.reconfig_until)
+        bws = []
+        for i in range(n):
+            a, b = ranks[i], ranks[(i + 1) % n]
+            bw = self.active[a, b]
+            if bw <= 0:
+                raise RuntimeError(
+                    f"ring hop {a}->{b} missing in topo {self.active_id}")
+            bws.append(bw)
+        bw_min = min(bws)
+        dur = self.cfg.base_latency * (n - 1) \
+            + bytes_per_rank * 8.0 / (bw_min * 1e9)
+        return start + dur
+
+
+def ring_matrix(n: int, ranks: List[int], gbps: float) -> np.ndarray:
+    """Bandwidth matrix wiring `ranks` into a bidirectional ring."""
+    m = np.zeros((n, n))
+    k = len(ranks)
+    for i in range(k):
+        a, b = ranks[i], ranks[(i + 1) % k]
+        m[a, b] = gbps
+        m[b, a] = gbps
+    return m
+
+
+def pairs_matrix(n: int, pairs: List[Tuple[int, int]],
+                 gbps: float) -> np.ndarray:
+    m = np.zeros((n, n))
+    for a, b in pairs:
+        m[a, b] = gbps
+        m[b, a] = gbps
+    return m
+
+
+def full_matrix(n: int, gbps: float) -> np.ndarray:
+    """EPS baseline: all links that any circuit configuration could form
+    are always active (strictly more bandwidth, paper §5.3)."""
+    m = np.full((n, n), gbps)
+    np.fill_diagonal(m, 0.0)
+    return m

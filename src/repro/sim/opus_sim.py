@@ -1,0 +1,207 @@
+"""End-to-end iteration simulation: Native EPS vs Opus vs Opus+Provisioning
+vs Ideal one-shot (paper §5.2-5.3, Figs 10-14).
+
+Single-timeline model: the rail schedule of one iteration is serialized by
+the model's data dependencies (paper §3: phases never overlap on a rail),
+so step time = sum of compute segments, collective times at the bandwidth
+each mode gives the active phase, and exposed reconfiguration/control time.
+
+Modes
+  native    electrical packet switch: every link always up, full NIC
+            bandwidth per collective, zero reconfig/control cost.
+  oneshot   circuits set once before the job: NIC bandwidth statically
+            split across scale-out dims (optimal sqrt-allocation), no
+            reconfigs.  [paper baseline (2), following ACTINA]
+  opus      in-job reconfiguration at phase boundaries, on-demand: the OCS
+            latency + controller barrier are exposed on the critical path
+            at every reconfiguration (Alg 1).
+  opus_prov speculative provisioning (Alg 2): reconfiguration starts right
+            after the previous phase's last op; exposed delay is
+            max(0, T_reconfig - T_window) (§4.2) plus the small async
+            control residue.
+
+Reconfiguration counting matches core.phases.count_reconfigs (digit-diff
+at the controller); per-op PP topo_writes cost control time even when no
+digits change (paper Fig 11 right).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import phases as ph
+from repro.core.windows import TimedOp, Window, windows_of
+from repro.sim.workload import GPUSpec, TimedWorkload
+
+MGMT_GBPS = 10.0          # CPU frontend network
+MGMT_LAT = 50e-6
+# a topo_write with NO phase shift (per-op PP write, suppressed sym write)
+# never takes the topology lock: it pipelines with the data plane and costs
+# only the shim/controller round trip (paper Fig 11 right: Config 3's
+# 6.46% comes purely from these)
+PP_OP_CTRL = 0.4e-3
+
+
+@dataclass(frozen=True)
+class SimParams:
+    mode: str                     # native | oneshot | opus | opus_prov
+    ocs_latency: float = 0.0      # seconds per OCS reconfiguration
+    # blocking topo_write barrier (default mode).  None -> scale-dependent:
+    # flat fan-in (1 ms + 0.8 ms/rank) up to rack scale, hierarchical
+    # (8.6 ms x log2 n) beyond — calibrated to Fig 11's 6.13% at 64 ranks
+    # while keeping the 512-2048 GPU overheads in Fig 12-14's range.
+    ctrl_sync: Optional[float] = None
+    ctrl_async: Optional[float] = None  # provisioning residue (~sync/8)
+    nic_linkup: float = 0.0       # §5.1 firmware link-up penalty knob
+
+    def resolved(self, n_ranks: int) -> Tuple[float, float]:
+        import math
+        if self.ctrl_sync is not None:
+            cs = self.ctrl_sync
+        else:
+            flat = 1e-3 + 0.8e-3 * n_ranks
+            tree = 8.6e-3 * math.log2(max(n_ranks, 2))
+            cs = min(flat, tree)
+        ca = self.ctrl_async if self.ctrl_async is not None else cs / 8.0
+        return cs, ca
+
+
+@dataclass
+class SimResult:
+    step_time: float
+    n_reconfigs: int
+    n_topo_writes: int
+    exposed_reconfig: float       # reconfig seconds on the critical path
+    exposed_control: float
+    timeline: List[TimedOp] = field(default_factory=list)
+
+    def windows(self) -> List[Window]:
+        return windows_of(self.timeline)
+
+
+def _static_split(job: ph.JobConfig) -> Dict[str, float]:
+    """Ideal one-shot bandwidth shares: optimal for serialized phases is
+    proportional to sqrt(total bytes) per dim (Cauchy-Schwarz)."""
+    totals: Dict[str, float] = {}
+    for op in ph.iteration_schedule(job):
+        if op.scale == "scale_out":
+            totals[op.dim] = totals.get(op.dim, 0.0) + op.bytes_per_gpu
+    if not totals:
+        return {}
+    import math
+    roots = {d: math.sqrt(v) for d, v in totals.items()}
+    z = sum(roots.values())
+    return {d: r / z for d, r in roots.items()}
+
+
+def simulate(wl: TimedWorkload, params: SimParams) -> SimResult:
+    job, gpu = wl.job, wl.gpu
+    n_ways = job.pp
+    table = ph.build_phase_table(wl.ops)
+    phase_of: Dict[int, int] = {}
+    for pi, p in enumerate(table):
+        for uid in range(p.start_idx, p.end_idx + 1):
+            phase_of[uid] = pi
+
+    shares = _static_split(job) if params.mode == "oneshot" else {}
+    reconf_total = params.ocs_latency + params.nic_linkup
+    ctrl_sync, ctrl_async = params.resolved(job.n_gpus)
+
+    t = 0.0
+    timeline: List[TimedOp] = []
+    # steady state: the topology left by the previous iteration is the
+    # last phase's requirement (cyclic, matching count_reconfigs)
+    digits: Optional[List[int]] = None
+    if table:
+        d = [1] * n_ways
+        for p in table:
+            d = ph.phase_digits(p, d, n_ways)
+        digits = d
+    n_reconfigs = 0
+    n_writes = 0
+    exposed_r = 0.0
+    exposed_c = 0.0
+    prev_phase = -1
+    prev_phase_end = 0.0
+
+    for op in wl.ops:
+        t += op.compute_before
+        if op.scale == "mgmt":
+            start = t
+            dur = MGMT_LAT + op.bytes_per_gpu * 8 / (MGMT_GBPS * 1e9)
+            t = start + dur
+            timeline.append(TimedOp(op, start, t))
+            continue
+        if op.scale == "scale_up":
+            continue  # TP never touches the rails
+
+        pi = phase_of[op.uid]
+        new_phase = pi != prev_phase
+        phase = table[pi]
+
+        if params.mode in ("opus", "opus_prov"):
+            # required topology for this phase
+            nd = ph.phase_digits(
+                phase, digits if digits is not None
+                else ph.phase_digits(phase, [1] * n_ways, n_ways), n_ways)
+            needs_reconfig = digits is not None and nd != digits
+            is_asym_write = op.dim == "pp"
+            issues_write = (new_phase or is_asym_write)
+            if issues_write:
+                n_writes += 1
+            if needs_reconfig and new_phase:
+                n_reconfigs += 1
+                if params.mode == "opus":
+                    # on-demand: barrier + OCS latency fully exposed
+                    delay = ctrl_sync + reconf_total
+                    exposed_c += ctrl_sync
+                    exposed_r += reconf_total
+                    t += delay
+                else:
+                    # provisioning: reconfig started right after the
+                    # previous phase ended; window hides it
+                    ready = prev_phase_end + ctrl_async + reconf_total
+                    hidden_start = max(t, ready)
+                    exp = max(0.0, ready - t)
+                    # split exposure between control residue and OCS
+                    exposed_c += min(exp, ctrl_async)
+                    exposed_r += max(0.0, exp - ctrl_async)
+                    t = hidden_start
+            elif issues_write:
+                # lock-free write (suppressed / per-op PP, digits unchanged)
+                exposed_c += PP_OP_CTRL
+                t += PP_OP_CTRL
+            digits = nd
+
+        # collective duration at the mode's bandwidth
+        bw = gpu.scale_out_gbps
+        if params.mode == "oneshot":
+            bw = gpu.scale_out_gbps * max(shares.get(op.dim, 1.0), 1e-3)
+        dur = wl.comm_time(op, bandwidth_gbps=bw)
+        start = t
+        t = start + dur
+        timeline.append(TimedOp(op, start, t))
+        if pi != prev_phase:
+            prev_phase = pi
+        prev_phase_end = t
+
+    return SimResult(t, n_reconfigs, n_writes, exposed_r, exposed_c,
+                     timeline)
+
+
+def sweep_latency(wl: TimedWorkload, latencies: List[float],
+                  modes: Tuple[str, ...] = ("native", "opus", "opus_prov"),
+                  **kw) -> Dict[str, List[Tuple[float, float]]]:
+    out: Dict[str, List[Tuple[float, float]]] = {m: [] for m in modes}
+    for m in modes:
+        for lat in latencies:
+            r = simulate(wl, SimParams(mode=m, ocs_latency=lat, **kw))
+            out[m].append((lat, r.step_time))
+    return out
+
+
+def analytical_estimate(wl: TimedWorkload, ocs_latency: float) -> float:
+    """Paper §5.2's naive estimate: T_native + T_reconfig * N_reconfig."""
+    native = simulate(wl, SimParams(mode="native")).step_time
+    n = ph.count_reconfigs(wl.ops, wl.job.pp)
+    return native + ocs_latency * n

@@ -1,0 +1,85 @@
+"""Timed workloads for the fabric simulator.
+
+Turns a JobConfig into a sequence of (CommOp, compute_before) with compute
+segments from a roofline estimate over the chosen GPU generation, and
+collective durations from ring/EPS bandwidth models.  Hardware presets
+follow the paper's evaluation platforms (§5).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List
+
+from repro.configs.base import ModelConfig
+from repro.core.phases import CommOp, JobConfig, iteration_schedule
+
+
+@dataclass(frozen=True)
+class GPUSpec:
+    name: str
+    flops: float            # peak dense bf16 FLOP/s
+    mfu: float              # achieved fraction on compute segments
+    scale_out_gbps: float   # per-GPU NIC bandwidth (one direction)
+    scale_up_gbps: float    # per-GPU intra-domain bandwidth
+    domain: int             # GPUs per scale-up domain
+
+
+GPUS: Dict[str, GPUSpec] = {
+    # Perlmutter node: 4x A100, Slingshot-11 (200 Gb/s per NIC), NVLink3
+    "a100": GPUSpec("a100", 312e12, 0.35, 200.0, 1600.0, 4),
+    # DGX H200: 8 GPUs, CX-7 400 Gb/s, NVLink4
+    "h200": GPUSpec("h200", 989e12, 0.40, 400.0, 3600.0, 8),
+    # GB200 NVL72: 800 Gb/s scale-out per GPU (paper §5.3)
+    "gb200": GPUSpec("gb200", 2500e12, 0.40, 800.0, 14400.0, 8),
+    # TPU v5e-like (for the dry-run cross-checks)
+    "tpu_v5e": GPUSpec("tpu_v5e", 197e12, 0.45, 400.0, 1600.0, 16),
+}
+
+
+def layer_flops(model: ModelConfig, tokens: int) -> float:
+    """Approximate fwd FLOPs of one layer over ``tokens`` tokens (6ND/L
+    style dense estimate; MoE counts active experts only)."""
+    d, f = model.d_model, model.d_ff
+    dh = model.resolved_head_dim if model.n_heads else 0
+    attn_proj = 2 * tokens * d * dh * (model.n_heads + 2 * model.n_kv_heads) \
+        + 2 * tokens * model.n_heads * dh * d
+    if model.moe:
+        de = model.moe.d_expert or f
+        act = model.moe.top_k + model.moe.n_shared_experts
+        ffn = 2 * tokens * 3 * d * de * act
+    else:
+        ffn = 2 * tokens * 3 * d * f
+    return float(attn_proj + ffn)
+
+
+@dataclass(frozen=True)
+class TimedWorkload:
+    job: JobConfig
+    gpu: GPUSpec
+    ops: List[CommOp]
+    t_fwd_layer: float
+    t_bwd_layer: float
+
+    def comm_time(self, op: CommOp, *, bandwidth_gbps: float,
+                  base_latency: float = 5e-6) -> float:
+        """Collective duration at ``bandwidth_gbps`` per-GPU bandwidth.
+
+        bytes_per_gpu already contains the (n-1)/n ring factor where
+        applicable; both ring (photonic) and free-form (EPS) execution are
+        bandwidth-bound at the same per-GPU byte count for AG/RS/AR, so the
+        fabric difference shows up through *which* bandwidth each phase
+        gets (full NIC for the active phase under Opus; shared under static
+        port partitioning).
+        """
+        return base_latency + op.bytes_per_gpu * 8.0 / (bandwidth_gbps * 1e9)
+
+
+def build(job: JobConfig, gpu_name: str) -> TimedWorkload:
+    gpu = GPUS[gpu_name]
+    mb_tokens = job.global_batch // job.fsdp // job.microbatches * job.seq_len
+    lf = layer_flops(job.model, mb_tokens) / job.tp
+    t_fwd = lf / (gpu.flops * gpu.mfu)
+    t_bwd = 2.0 * t_fwd
+    ops = iteration_schedule(job, t_fwd_layer=t_fwd, t_bwd_layer=t_bwd)
+    return TimedWorkload(job, gpu, ops, t_fwd, t_bwd)

@@ -1,0 +1,151 @@
+"""Per-arch smoke tests (reduced configs) + decode/forward consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ASSIGNED_ARCHS, PAPER_ARCHS, get_config
+from repro.models import transformer as T
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=16):
+    batch = {
+        "tokens": jax.random.randint(KEY, (b, s), 0, cfg.vocab_size,
+                                     jnp.int32),
+        "targets": jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                                      cfg.vocab_size, jnp.int32),
+    }
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            KEY, (b, cfg.frontend.n_tokens, cfg.frontend.d_embed))
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            KEY, (b, cfg.frontend.n_tokens, cfg.frontend.d_embed))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_forward_and_grad(arch):
+    """One forward/train step on CPU: output shapes + no NaNs (brief)."""
+    cfg = get_config(arch, smoke=True)
+    params = T.init_lm(KEY, cfg)
+    batch = _batch(cfg)
+    loss, metrics = jax.jit(lambda p, b: T.lm_loss(p, b, cfg))(params, batch)
+    assert np.isfinite(float(loss))
+    logits, _ = T.lm_forward(params, batch, cfg)
+    assert logits.shape[0] == 2 and logits.shape[1] == 16
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    g = jax.jit(jax.grad(lambda p, b: T.lm_loss(p, b, cfg)[0]))(params, batch)
+    for leaf in jax.tree_util.tree_leaves(g):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ["yi_9b", "h2o_danube_3_4b", "mamba2_370m",
+                                  "gemma_7b"])
+def test_decode_matches_forward(arch):
+    cfg = get_config(arch, smoke=True).replace(dtype="float32")
+    params = T.init_lm(KEY, cfg)
+    b, s = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                              cfg.vocab_size, jnp.int32)
+    logits_tf, _ = T.lm_forward(params, {"tokens": toks}, cfg)
+    state = T.init_decode_state(cfg, b, capacity=s)
+    outs = []
+    step = jax.jit(lambda st, t, p: T.decode_step(params, st, t, p, cfg))
+    for t in range(s):
+        lg, state = step(state, toks[:, t:t + 1], jnp.int32(t))
+        outs.append(lg[:, 0])
+    np.testing.assert_allclose(logits_tf, jnp.stack(outs, 1), atol=2e-3)
+
+
+def test_jamba_decode_matches_with_big_capacity_factor():
+    """Hybrid (mamba+attn+moe); cf high enough that no token drops."""
+    cfg = get_config("jamba_v0_1_52b", smoke=True).replace(dtype="float32")
+    cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = T.init_lm(KEY, cfg)
+    b, s = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                              cfg.vocab_size, jnp.int32)
+    logits_tf, _ = T.lm_forward(params, {"tokens": toks}, cfg)
+    state = T.init_decode_state(cfg, b, capacity=s)
+    outs = []
+    for t in range(s):
+        lg, state = T.decode_step(params, state, toks[:, t:t + 1],
+                                  jnp.int32(t), cfg)
+        outs.append(lg[:, 0])
+    np.testing.assert_allclose(logits_tf, jnp.stack(outs, 1), atol=2e-3)
+
+
+def test_sliding_window_limits_attention():
+    """SWA: logits at position t must not depend on tokens < t - window."""
+    cfg = get_config("h2o_danube_3_4b", smoke=True).replace(dtype="float32")
+    params = T.init_lm(KEY, cfg)
+    s = cfg.sliding_window + 8
+    toks = jax.random.randint(KEY, (1, s), 0, cfg.vocab_size, jnp.int32)
+    toks2 = toks.at[0, 0].set((toks[0, 0] + 7) % cfg.vocab_size)
+    l1, _ = T.lm_forward(params, {"tokens": toks}, cfg)
+    l2, _ = T.lm_forward(params, {"tokens": toks2}, cfg)
+    # last position is > window away from position 0 (only 2 layers =>
+    # receptive field 2*window; use the final position and window ≥ s-1?)
+    # With 2 layers the receptive field is 2*window = 32 < s? choose pos:
+    pos = s - 1
+    if pos - 2 * cfg.sliding_window >= 0:
+        np.testing.assert_allclose(l1[0, pos], l2[0, pos], atol=1e-5)
+    # and position 0 must change
+    assert float(jnp.max(jnp.abs(l1[0, 0] - l2[0, 0]))) > 1e-6
+
+
+def test_prefix_lm_bidirectional_prefix():
+    """VLM: patch tokens attend bidirectionally within the prefix."""
+    cfg = get_config("paligemma_3b", smoke=True).replace(dtype="float32")
+    params = T.init_lm(KEY, cfg)
+    b, s = 1, 8
+    batch = _batch(cfg, b, s)
+    logits, _ = T.lm_forward(params, batch, cfg)
+    # perturb the LAST patch: with prefix-LM the FIRST text logits change
+    # (they see the full prefix); pure causality within the prefix would
+    # also allow this, so additionally check an early-patch perturbation
+    # changes late outputs (sanity) — the real check is in attention()
+    # unit form below.
+    p2 = batch["patches"].at[0, -1].add(10.0)
+    logits2, _ = T.lm_forward(params, dict(batch, patches=p2), cfg)
+    assert float(jnp.max(jnp.abs(logits - logits2))) > 1e-6
+
+
+def test_attention_prefix_mask_unit():
+    from repro.models.attention import attention, attn_init
+    cfg = get_config("yi_9b", smoke=True).replace(dtype="float32")
+    p = attn_init(KEY, cfg)
+    x = jax.random.normal(KEY, (1, 12, cfg.d_model))
+    pos = jnp.arange(12)[None]
+    y = attention(p, x, pos, cfg, causal=True, prefix_len=4)
+    # row 0 attends to rows 1..3 under prefix-LM: perturbing row 3 changes
+    # row 0's output
+    x2 = x.at[0, 3].add(1.0)
+    y2 = attention(p, x2, pos, cfg, causal=True, prefix_len=4)
+    assert float(jnp.max(jnp.abs(y[0, 0] - y2[0, 0]))) > 1e-6
+    # without prefix, row 0 is causal: row 3 cannot affect it
+    y3 = attention(p, x, pos, cfg, causal=True)
+    y4 = attention(p, x2, pos, cfg, causal=True)
+    np.testing.assert_allclose(y3[0, 0], y4[0, 0], atol=1e-6)
+
+
+@pytest.mark.parametrize("arch", PAPER_ARCHS)
+def test_paper_eval_configs_resolve(arch):
+    cfg = get_config(arch)
+    assert cfg.n_layers > 0 and cfg.d_model > 0
+
+
+def test_audio_encdec_cross_attention_used():
+    cfg = get_config("seamless_m4t_medium", smoke=True).replace(
+        dtype="float32")
+    params = T.init_lm(KEY, cfg)
+    batch = _batch(cfg)
+    l1, _ = T.lm_forward(params, batch, cfg)
+    batch2 = dict(batch, frames=batch["frames"] + 1.0)
+    l2, _ = T.lm_forward(params, batch2, cfg)
+    assert float(jnp.max(jnp.abs(l1 - l2))) > 1e-6  # encoder reaches logits

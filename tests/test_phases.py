@@ -1,0 +1,108 @@
+"""Schedule/phase/window model vs the paper's reported counts."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import get_config
+from repro.core.phases import (CommOp, JobConfig, build_phase_table,
+                               count_reconfigs, count_windows,
+                               eq5_window_count, iteration_schedule,
+                               one_f_one_b)
+
+
+CFG = get_config("llama3_8b")
+
+
+def test_config1_reconfigs_match_paper():
+    job = JobConfig(model=CFG, tp=4, fsdp=2, pp=2, global_batch=16,
+                    seq_len=8192)
+    assert count_reconfigs(iteration_schedule(job), job.pp) == 6
+
+
+def test_config2_reconfigs_match_paper():
+    job = JobConfig(model=CFG, tp=4, fsdp=8, pp=2, global_batch=64,
+                    seq_len=8192)
+    assert count_reconfigs(iteration_schedule(job), job.pp) == 6
+
+
+def test_testbed_reconfigs_match_paper():
+    job = JobConfig(model=CFG.replace(n_layers=6), tp=2, fsdp=2, pp=2,
+                    global_batch=2, seq_len=2048, zero3=False)
+    assert count_reconfigs(iteration_schedule(job), job.pp) == 4
+
+
+def test_config3_pp_only_zero_reconfigs():
+    job = JobConfig(model=get_config("deepseek_v3_16b"), tp=4, fsdp=1,
+                    pp=4, global_batch=8, seq_len=2048)
+    assert count_reconfigs(iteration_schedule(job), job.pp) == 0
+
+
+def test_eq5_405b_approx_127():
+    assert eq5_window_count(126, 32, 16) == 127
+
+
+def test_1f1b_dependencies():
+    """fwd(s,m) after fwd(s-1,m); bwd(s,m) after bwd(s+1,m) and fwd(s,m)."""
+    for pp, m in [(2, 2), (4, 4), (4, 8), (8, 8)]:
+        ticks = one_f_one_b(pp, m)
+        done = set()
+        for tick in ticks:
+            for s, k, mb in tick:
+                if k == "fwd":
+                    assert s == 0 or (s - 1, "fwd", mb) in done, (pp, m, s, mb)
+                else:
+                    assert (s, "fwd", mb) in done
+                    assert s == pp - 1 or (s + 1, "bwd", mb) in done
+            done |= {t for t in tick}
+        assert len(done) == 2 * pp * m
+
+
+def test_phase_table_maximal_runs():
+    ops = iteration_schedule(JobConfig(model=CFG, tp=4, fsdp=2, pp=2,
+                                       global_batch=16, seq_len=8192))
+    table = build_phase_table(ops)
+    for p1, p2 in zip(table, table[1:]):
+        assert p1.dim != p2.dim         # maximal: neighbors differ
+        assert p2.start_idx > p1.end_idx
+
+
+@given(st.lists(st.sampled_from(["fsdp", "pp", "dp"]), min_size=1,
+                max_size=40))
+@settings(max_examples=100, deadline=None)
+def test_phase_table_property(dims):
+    ops = [CommOp(i, d, "all_gather" if d != "pp" else "send_recv",
+                  0, 0, 1e6, "scale_out") for i, d in enumerate(dims)]
+    table = build_phase_table(ops)
+    # 1) covers all ops exactly once, in order
+    covered = []
+    for p in table:
+        covered.extend(range(p.start_idx, p.end_idx + 1))
+    assert covered == list(range(len(dims)))
+    # 2) runs are maximal
+    for p1, p2 in zip(table, table[1:]):
+        assert p1.dim != p2.dim
+
+
+def test_windows_exceed_1ms_claim():
+    """Paper §3.2: >75% of inter-phase windows exceed 1 ms."""
+    from repro.core.windows import fraction_over
+    from repro.sim.opus_sim import SimParams, simulate
+    from repro.sim.workload import build
+    job = JobConfig(model=CFG, tp=4, fsdp=2, pp=2, global_batch=16,
+                    seq_len=8192)
+    r = simulate(build(job, "a100"), SimParams(mode="native"))
+    assert fraction_over(r.windows(), 1e-3) > 0.75
+
+
+def test_moe_choice_positions_match_onehot_oracle():
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.models.moe import choice_positions
+    key = jax.random.PRNGKey(0)
+    idx = jax.random.randint(key, (2, 16, 3), 0, 6)
+    pos = choice_positions(idx, 6)
+    # oracle: cumulative count per expert over flattened (T,K) priority
+    onehot = jax.nn.one_hot(idx, 6, dtype=jnp.int32).reshape(2, 48, 6)
+    cum = jnp.cumsum(onehot, axis=1) - onehot
+    want = jnp.sum(cum * onehot, -1).reshape(2, 16, 3)
+    np.testing.assert_array_equal(pos, want)

@@ -1,0 +1,177 @@
+"""Controller/shim protocol invariants G1/G2/O1/O2 (paper §4.2)."""
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.controller import Controller, GroupState
+from repro.core.orchestrator import OCSDriver, RailOrchestrator
+from repro.core.phases import JobConfig, iteration_schedule
+from repro.core.shim import DEFAULT, PROVISIONING, Shim, table_from_ops
+from repro.core.topo import JobPlacement, TopoId
+
+
+def _rig(n_ways=2, per_way=4, n_rails=2):
+    orchs = []
+    for r in range(n_rails):
+        ocs = OCSDriver(n_ports=64, reconfig_latency=0.01)
+        orch = RailOrchestrator(r, ocs)
+        ports = tuple(tuple(range(w * per_way, (w + 1) * per_way))
+                      for w in range(n_ways))
+        pl = JobPlacement("job0", ports,
+                          {1: {w: [ports[w]] for w in range(n_ways)}})
+        orch.register_job(pl, TopoId.uniform(n_ways, 1))
+        orchs.append(orch)
+    ctrl = Controller("job0", n_ways, orchs)
+    ctrl.register_group(GroupState("fsdp", "fsdp", 1, size=4,
+                                   rails=(0, 1), ways=(0, 1)))
+    ctrl.register_group(GroupState("pp", "pp", 0, size=2,
+                                   rails=(0, 1), ways=(0,)))
+    return ctrl, orchs
+
+
+def test_barrier_waits_for_all_ranks():
+    ctrl, orchs = _rig()
+    r1 = ctrl.topo_write(0, "pp", 0, asym_way=0)
+    assert not r1.complete               # 1 of 2 ranks
+    n0 = orchs[0].n_reconfig_events
+    r2 = ctrl.topo_write(1, "pp", 0, asym_way=0)
+    assert r2.complete and r2.reconfigured
+    assert orchs[0].n_reconfig_events == n0 + 1
+    assert set(r2.acked_ranks) == {0, 1}  # ACK fan-out to all waiters
+
+
+def test_ready_counter_clears_between_ops():
+    ctrl, _ = _rig()
+    for idx in range(3):
+        for rank in range(2):
+            r = ctrl.topo_write(rank, "pp", idx, asym_way=0)
+        assert r.complete
+    assert ctrl.groups["pp"].idx == 3
+    assert ctrl.groups["pp"].ready == 0
+
+
+def test_o1_suppression_no_reconfig_same_topo():
+    ctrl, orchs = _rig()
+    for rank in range(2):
+        ctrl.topo_write(rank, "pp", 0, asym_way=0)
+    n = orchs[0].n_reconfig_events
+    # a second PP write with unchanged digits: barrier completes but the
+    # orchestrator programs nothing
+    for rank in range(2):
+        r = ctrl.topo_write(rank, "pp", 1, asym_way=0)
+    assert r.complete and not r.reconfigured
+    assert orchs[0].n_reconfig_events == n
+
+
+def test_stale_write_rejected():
+    ctrl, _ = _rig()
+    with pytest.raises(ValueError):
+        ctrl.topo_write(0, "pp", 5, asym_way=0)
+
+
+def test_group_count_identity():
+    assert Controller.n_groups(2, 3, 4) == 2 * 3 + 3 * 4 + 4 * 2
+
+
+def test_giant_ring_fallback_on_persistent_failure():
+    ctrl, orchs = _rig()
+    # a PP write CHANGES digits (1,1)->(0,0), forcing a dispatch whose OCS
+    # persistently times out
+    r = ctrl.topo_write(0, "pp", 0, asym_way=0)
+    r = ctrl.topo_write(1, "pp", 0, asym_way=0,
+                        ocs_fail=lambda attempt: True)
+    assert ctrl.fallback_giant_ring
+    assert any("giant ring" in s for s in ctrl.failure_log)
+    # the giant ring connects all job ports in one cycle
+    ocs = orchs[0].ocs
+    ports = sorted(orchs[0].jobs["job0"].placement.all_ports)
+    seen, p = set(), ports[0]
+    for _ in range(len(ports)):
+        seen.add(p)
+        p = ocs.connected(p)
+    assert seen == set(ports)
+
+
+# ---------------------------------------------------------------------------
+# shim (Algorithms 1-3)
+# ---------------------------------------------------------------------------
+
+
+def _ops():
+    cfg = get_config("llama3_8b")
+    job = JobConfig(model=cfg, tp=4, fsdp=2, pp=2, global_batch=16,
+                    seq_len=8192)
+    return iteration_schedule(job)
+
+
+def test_shim_g1_lock_during_phase_shift():
+    ops = _ops()
+    shim = Shim(0, mode=DEFAULT)
+    shim.profile(ops)
+    scale_out = [o for o in ops if o.scale == "scale_out"]
+    first = scale_out[0]
+    acts = shim.pre_comm(first)
+    assert shim.topology_busy            # lock held (G1)
+    shim.post_comm(first)
+    # lock releases only at the phase's LAST op
+    e = shim.phase_table[0]
+    if first.uid != e.end_uid:
+        assert shim.topology_busy
+
+
+def test_shim_default_writes_at_boundaries_and_pp():
+    ops = _ops()
+    shim = Shim(0, mode=DEFAULT)
+    shim.profile(ops)
+    for op in ops:
+        shim.pre_comm(op)
+        shim.post_comm(op)
+    n_pp = sum(1 for o in ops if o.dim == "pp")
+    n_phases = len(shim.phase_table)
+    # every PP op writes; every phase boundary writes
+    assert shim.n_topo_writes >= n_pp
+    assert shim.comm_stage == n_phases   # walked the whole table
+
+
+def test_shim_provisioning_writes_after_not_before():
+    ops = _ops()
+    shim = Shim(0, mode=PROVISIONING)
+    shim.profile(ops)
+    pre_writes = post_writes = 0
+    for op in ops:
+        pre = shim.pre_comm(op)
+        pre_writes += sum(1 for a in pre if a.kind == "topo_write")
+        post = shim.post_comm(op)
+        post_writes += sum(1 for a in post if a.kind == "topo_write")
+    assert pre_writes == 0               # O2: all writes speculative
+    assert post_writes > 0
+
+
+def test_shim_routes_mgmt_to_frontend():
+    ops = _ops()
+    shim = Shim(0)
+    shim.profile(ops)
+    mgmt = [o for o in ops if o.scale == "mgmt"]
+    if mgmt:
+        acts = shim.pre_comm(mgmt[0])
+        assert acts[0].kind == "select_network"
+        assert acts[0].network == "frontend"
+
+
+def test_network_backend_g2_rejection():
+    """The analytical backend rejects reconfigs with traffic in flight."""
+    import numpy as np
+    from repro.sim.network import NetConfig, ReconfigurableBackend, \
+        ring_matrix
+    cfg = NetConfig(n_ranks=4, link_gbps=100.0, reconfig_latency=0.01)
+    be = ReconfigurableBackend(cfg, {
+        0: ring_matrix(4, [0, 1, 2, 3], 100.0),
+        1: ring_matrix(4, [0, 2, 1, 3], 100.0)})
+    be.reconfigure(0, 0.0)
+    end = be.transfer(0, 1, 1e6, 0.02)
+    with pytest.raises(RuntimeError):
+        be.reconfigure(1, 0.03)          # in-flight -> G2 violation
+    be.complete()
+    be.reconfigure(1, end)               # after drain: fine
+    # queued traffic released after reconfiguration completes
+    t2 = be.transfer(0, 2, 1e6, end + 0.001)
+    assert t2 >= end + cfg.reconfig_latency

@@ -1,0 +1,118 @@
+"""TopoId encoding, sub-mapping decomposition, orchestrator dispatch
+(paper §4.1, Fig 8) — including hypothesis property tests."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topo import (JobPlacement, TopoId, affected_ways,
+                             build_submapping, diff_digits, full_mapping,
+                             naive_storage, opus_storage, ports_per_event,
+                             ring_pairs)
+from repro.core.orchestrator import OCSDriver, RailOrchestrator
+
+
+@given(st.lists(st.integers(0, 9), min_size=1, max_size=10))
+@settings(max_examples=200, deadline=None)
+def test_topoid_roundtrip(digits):
+    t = TopoId(tuple(digits))
+    assert TopoId.decode(t.encode(), t.n_ways) == t
+
+
+def test_fig8_example():
+    """PP=3, DP=1, CP=2: all-DP = 111; stages 0,1 -> PP gives 001 read
+    way-0-least-significant (paper reads digits left-to-right per stage)."""
+    t = TopoId.uniform(3, 1)
+    assert t.encode() == 111
+    t2 = t.with_ways([0, 1], 0)
+    assert t2.digits == (0, 0, 1)
+    assert diff_digits(t, t2) == [0, 1]
+
+
+def test_affected_ways_sym_to_sym():
+    a = TopoId((1, 1, 2))
+    b = TopoId((2, 1, 2))
+    assert affected_ways(a, b) == [0]
+
+
+def test_affected_ways_asym_to_sym_pulls_neighbor():
+    """Leaving PP at way m disturbs the adjacent PP-connected way (§4.1)."""
+    a = TopoId((0, 0, 1))
+    b = TopoId((1, 0, 1))
+    assert affected_ways(a, b) == [0, 1]
+
+
+def _placement(n_ways=2, per_way=4):
+    ports = tuple(tuple(range(w * per_way, (w + 1) * per_way))
+                  for w in range(n_ways))
+    sym = {1: {w: [ports[w]] for w in range(n_ways)},
+           2: {w: [ports[w][:2], ports[w][2:]] for w in range(n_ways)}}
+    return JobPlacement("job0", ports, sym)
+
+
+def test_submapping_rings_and_pp_pairs():
+    pl = _placement()
+    t_dp = TopoId((1, 1))
+    sm = build_submapping(pl, t_dp, 0)
+    assert set(sm.pairs) == set(ring_pairs((0, 1, 2, 3)))
+    t_pp = TopoId((0, 0))
+    sm0 = build_submapping(pl, t_pp, 0)
+    assert sm0.pairs == ((0, 4), (1, 5), (2, 6), (3, 7))
+
+
+def test_storage_decomposition_counts():
+    assert naive_storage(3, 4, 64) == 81 * 64
+    assert opus_storage(3, 4, 64) == 3 * 64
+    assert ports_per_event(64, 4) == 16
+
+
+def test_orchestrator_reprograms_only_affected_ports():
+    ocs = OCSDriver(n_ports=64)
+    orch = RailOrchestrator(0, ocs)
+    pl = _placement()
+    orch.register_job(pl, TopoId((1, 1)))
+    calls0 = ocs.n_ports_programmed
+    # DP -> CP on way 1 only: way-0 circuits untouched
+    before_way0 = {p: ocs.connected(p) for p in range(4)}
+    orch.apply("job0", TopoId((1, 2)))
+    after_way0 = {p: ocs.connected(p) for p in range(4)}
+    assert before_way0 == after_way0
+    assert ocs.n_ports_programmed > calls0
+
+
+def test_orchestrator_noop_topo_write_programs_nothing():
+    """O1: identical digits -> no OCS programming (suppression)."""
+    ocs = OCSDriver(n_ports=64)
+    orch = RailOrchestrator(0, ocs)
+    orch.register_job(_placement(), TopoId((1, 1)))
+    n = ocs.n_program_calls
+    orch.apply("job0", TopoId((1, 1)))
+    assert ocs.n_program_calls == n
+    assert orch.n_reconfig_events == 0
+
+
+def test_multi_job_isolation():
+    """Reconfiguring one job's circuits never disturbs another's (§7)."""
+    ocs = OCSDriver(n_ports=64)
+    orch = RailOrchestrator(0, ocs)
+    pl_a = _placement()
+    ports_b = ((8, 9, 10, 11), (12, 13, 14, 15))
+    pl_b = JobPlacement("job1", ports_b,
+                        {1: {0: [ports_b[0]], 1: [ports_b[1]]}})
+    orch.register_job(pl_a, TopoId((1, 1)))
+    orch.register_job(pl_b, TopoId((1, 1)))
+    before_b = {p: ocs.connected(p) for p in range(8, 16)}
+    orch.apply("job0", TopoId((0, 0)))
+    after_b = {p: ocs.connected(p) for p in range(8, 16)}
+    assert before_b == after_b
+
+
+@given(st.integers(2, 5), st.integers(2, 4))
+@settings(max_examples=30, deadline=None)
+def test_full_mapping_covers_every_way(n_ways, per_way):
+    ports = tuple(tuple(range(w * per_way, (w + 1) * per_way))
+                  for w in range(n_ways))
+    pl = JobPlacement("j", ports, {1: {w: [ports[w]]
+                                       for w in range(n_ways)}})
+    sms = full_mapping(pl, TopoId.uniform(n_ways, 1))
+    assert len(sms) == n_ways
+    for w, sm in enumerate(sms):
+        assert sm.ports <= set(ports[w])
