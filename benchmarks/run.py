@@ -50,27 +50,35 @@ def roofline_report(dry_dir: str = "results/dryrun"):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI subset: smallest configs only")
     args = ap.parse_args()
 
     headlines = {}
-    for fn in paper.ALL:
+    for fn in (paper.SMOKE if args.smoke else paper.ALL):
         print()
         headlines[fn.__name__] = fn()
-    if not args.skip_roofline:
+    if not args.skip_roofline and not args.smoke:
         headlines["roofline"] = roofline_report()
 
     print("\n== headline summary ==")
     hs = headlines.get("bench_cost_power", {})
     ls = headlines.get("bench_latency_sweep", {})
     co = headlines.get("bench_control_overhead", {})
-    print(f"  cost savings (H200): {hs.get('h200_cost', 0):.2f}x "
-          f"(paper 4.27x)")
-    print(f"  power savings (H200): {hs.get('h200_power', 0):.2f}x "
-          f"(paper 23.86x)")
-    print(f"  Config1 @50ms overhead: {ls.get('Config1_50ms_opus', 0):.3f}x /"
-          f" prov {ls.get('Config1_50ms_prov', 0):.3f}x (paper 1.05/1.01)")
-    print(f"  control overhead C2: {100*co.get('c2_ctrl', 0):.2f}% -> "
-          f"prov {100*co.get('c2_ctrl_prov', 0):.2f}% (paper 6.13->0.79)")
+    if hs:
+        print(f"  cost savings (H200): {hs.get('h200_cost', 0):.2f}x "
+              f"(paper 4.27x)")
+        print(f"  power savings (H200): {hs.get('h200_power', 0):.2f}x "
+              f"(paper 23.86x)")
+    if ls:
+        print(f"  Config1 @50ms overhead: "
+              f"{ls.get('Config1_50ms_opus', 0):.3f}x /"
+              f" prov {ls.get('Config1_50ms_prov', 0):.3f}x "
+              f"(paper 1.05/1.01)")
+    if co:
+        print(f"  control overhead C2: {100*co.get('c2_ctrl', 0):.2f}% -> "
+              f"prov {100*co.get('c2_ctrl_prov', 0):.2f}% "
+              f"(paper 6.13->0.79)")
     return 0
 
 

@@ -44,10 +44,19 @@ def main():
 
     print("\n=== 3. one iteration under each fabric mode ===")
     wl = build(job, "a100")
+    last = None
     for mode in ("native", "oneshot", "opus", "opus_prov"):
         r = simulate(wl, SimParams(mode=mode, ocs_latency=0.05))
         print(f"  {mode:10s} step={r.step_time:7.3f}s "
-              f"reconfigs={r.n_reconfigs}")
+              f"reconfigs={r.n_reconfigs}  engine={r.engine}")
+        last = r
+    # the opus numbers above came out of the REAL control plane — the
+    # simulator drove per-rank Shims, the Controller barrier and the OCS
+    # drivers (repro.core.plane.ControlPlane); here is their telemetry:
+    t = last.telemetry["measured"]
+    print(f"  control plane (per iteration): {t['n_barriers']} barriers, "
+          f"{t['n_dispatches']} dispatches, "
+          f"{t['n_ports_programmed']} ports programmed")
 
     print("\n=== 4. why bother: the rail fabric bill ===")
     c = compare(512, 8, "eps_400g")

@@ -29,7 +29,16 @@ def main():
     ap.add_argument("--tp", type=int, default=8)
     ap.add_argument("--pp", type=int, default=4)
     ap.add_argument("--seq", type=int, default=4096)
+    ap.add_argument("--rails", type=int, default=1,
+                    help="OCS/orchestrator pairs the job spans")
+    ap.add_argument("--fault", action="store_true",
+                    help="inject a persistent OCS failure (§4.2 fallback)")
+    ap.add_argument("--engine", default="event",
+                    choices=["event", "analytic"],
+                    help="event = drive the real control plane")
     args = ap.parse_args()
+    if args.fault and args.engine == "analytic":
+        ap.error("--fault needs the event engine (real control plane)")
 
     cfg = get_config(args.model)
     dp = args.gpus // (args.tp * args.pp)
@@ -42,10 +51,23 @@ def main():
           f"(TP={args.tp} DP={dp} PP={args.pp}):")
     print(f"  native EPS step: {nat:.3f}s; "
           f"{count_reconfigs(wl.ops, job.pp)} reconfigs/step needed")
+    ocs_fail = (lambda attempt: True) if args.fault else None
+    last = None
     for tech, lat in OCS_TECH.items():
-        p = simulate(wl, SimParams(mode="opus_prov", ocs_latency=lat))
+        p = simulate(wl, SimParams(mode="opus_prov", ocs_latency=lat,
+                                   n_rails=args.rails),
+                     engine=args.engine, ocs_fail=ocs_fail)
         print(f"  {tech:24s} ({lat*1e3:5.0f} ms): "
               f"{100*(p.step_time/nat-1):6.2f}% overhead")
+        last = p
+    if last.telemetry is not None:
+        t = last.telemetry["measured"]
+        print(f"  control plane (per iteration): "
+              f"{t['n_barriers']} barriers, "
+              f"{t['n_dispatches']} dispatches, "
+              f"{t['n_ports_programmed']} ports programmed"
+              + (", GIANT-RING FALLBACK active"
+                 if last.telemetry["fallback_giant_ring"] else ""))
     part = "eps_800g_cpo" if args.gpu == "gb200" else "eps_400g"
     c = compare(args.gpus, GPUS[args.gpu].domain, part)
     print(f"  network bill: {c['cost_ratio']:.2f}x cost and "

@@ -1,0 +1,8 @@
+"""Photonic-rails reproduction package.
+
+The pure-python layers (core/, sim/, benchmarks) import no jax.  Modules
+that touch the jax mesh/shard_map API import ``repro.compat`` themselves,
+which installs forward-compat aliases for older jax versions (see
+DESIGN.md §7) — keeping the simulator and benchmark entry points free of
+jax initialization at import time.
+"""

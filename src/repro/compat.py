@@ -1,0 +1,126 @@
+"""Forward-compatibility aliases for the pinned jax in this container.
+
+The code targets the current jax mesh API (``jax.set_mesh``,
+``jax.sharding.AxisType``, ``jax.make_mesh(..., axis_types=...)``,
+``jax.shard_map(..., axis_names=..., check_vma=...)``).  The container pins
+jax 0.4.x, where the same functionality exists under older names:
+
+  jax.set_mesh(mesh)          -> ``with mesh:`` (Mesh is a context manager)
+  jax.sharding.AxisType       -> absent; Auto was the only behaviour
+  jax.make_mesh(axis_types=)  -> kwarg absent; Auto implied
+  jax.shard_map(axis_names=S) -> jax.experimental.shard_map.shard_map with
+                                 auto = mesh axes - S
+  jax.shard_map(check_vma=b)  -> check_rep=b
+
+Importing this module (done from ``repro/__init__.py``) installs the new
+names onto jax when missing, so the rest of the tree — and the tests, which
+use the new spellings directly — run unchanged on either version.  On a
+current jax every patch is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+import functools
+
+import jax
+import jax.sharding
+
+
+def _install() -> None:
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    # make_mesh: accept and drop axis_types (Auto was implied pre-0.5).
+    # Signature inspection, NOT a probe call — constructing a mesh would
+    # initialize the jax backend at import time.
+    import inspect
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        _make_mesh = jax.make_mesh
+
+        @functools.wraps(_make_mesh)
+        def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+            assert axis_types is None or all(
+                t == jax.sharding.AxisType.Auto for t in axis_types), \
+                "only Auto axes exist on this jax version"
+            return _make_mesh(axis_shapes, axis_names, **kw)
+
+        jax.make_mesh = make_mesh
+
+    if not hasattr(jax, "set_mesh"):
+        @contextlib.contextmanager
+        def set_mesh(mesh):
+            with mesh:
+                yield mesh
+
+        jax.set_mesh = set_mesh
+
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+                      check_vma=None, check_rep=None):
+            auto = frozenset()
+            if axis_names is not None:
+                auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+            check = True
+            if check_vma is not None:
+                check = check_vma
+            elif check_rep is not None:
+                check = check_rep
+            return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check,
+                              auto=auto)
+
+        jax.shard_map = shard_map
+
+
+_install()
+
+
+_PARTIAL_MANUAL = None
+
+
+def supports_partial_manual() -> bool:
+    """Whether shard_map can leave some mesh axes GSPMD-auto.
+
+    The photonic datapath is shard_map-manual over the rail axes while the
+    scale-up ``model`` axis stays auto.  Old jaxlib CPU builds cannot
+    partition such programs (axis_index lowers to an unsupported
+    PartitionId; ppermute trips a fatal partitioner check), so the
+    launchers fall back to the GSPMD (EPS) formulation of the same math.
+    Probed once with a tiny axis_index program — the recoverable failure
+    mode — and cached.
+    """
+    global _PARTIAL_MANUAL
+    if _PARTIAL_MANUAL is not None:
+        return _PARTIAL_MANUAL
+    import numpy as np
+    if jax.device_count() < 4:
+        # cannot build a (2, 2) probe mesh; a size-1 auto axis would not
+        # exercise the partitioner, so fall back to the version the fix
+        # landed in — on old jax the broken path ABORTS the process, so
+        # guessing True is never safe here
+        _PARTIAL_MANUAL = tuple(
+            int(x) for x in jax.__version__.split(".")[:2]) >= (0, 5)
+        return _PARTIAL_MANUAL
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec
+    mesh = jax.sharding.Mesh(
+        np.asarray(jax.devices()[:4]).reshape(2, 2), ("_pm_a", "_pm_b"))
+    f = jax.jit(jax.shard_map(
+        lambda x: x + jax.lax.axis_index("_pm_a"),
+        mesh=mesh, in_specs=PartitionSpec("_pm_a"),
+        out_specs=PartitionSpec("_pm_a"), axis_names={"_pm_a"},
+        check_vma=False))
+    try:
+        f(jnp.zeros((2,), jnp.int32)).block_until_ready()
+        _PARTIAL_MANUAL = True
+    except Exception:
+        _PARTIAL_MANUAL = False
+    return _PARTIAL_MANUAL

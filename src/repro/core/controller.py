@@ -69,8 +69,8 @@ class Controller:
     # -- topo_write barrier (paper "Runtime synchronization") ---------------
     def topo_write(self, rank: int, group_id: str, idx: int,
                    asym_way: int = -1, now: float = 0.0,
-                   ocs_fail: Optional[Callable[[int], bool]] = None
-                   ) -> WriteResult:
+                   ocs_fail: Optional[Callable[[int], bool]] = None,
+                   ways: Optional[Sequence[int]] = None) -> WriteResult:
         g = self.groups[group_id]
         if idx != g.idx:
             # stale write (rank ahead/behind): queue semantics collapse to
@@ -87,16 +87,42 @@ class Controller:
         self.n_barriers += 1
         reconfigured = False
         ack = now
-        ways = (asym_way, asym_way + 1) if g.digit == PP_DIGIT else g.ways
+        if g.digit == PP_DIGIT:
+            # each PP way also claims the way it feeds (Send/Recv circuit)
+            base = tuple(ways) if ways else (asym_way,)
+            ways = tuple(sorted({x for w in base for x in (w, w + 1)}))
+        elif not ways or any(w < 0 for w in ways):
+            ways = g.ways          # -1 = "all ways of the group"
         ways = tuple(w for w in ways if 0 <= w < self.n_ways)
+        if self.fallback_giant_ring:
+            # §4.2: after the persistent-failure fallback the job runs on
+            # the static giant ring — barriers still synchronize the ranks
+            # but no further reconfiguration is dispatched (no-op writes).
+            acked = tuple(g.waiting)
+            g.idx += 1
+            g.ready = 0
+            g.waiting = []
+            return WriteResult(True, now, False, acked)
         for o in self.orchestrators:
             if o.rail_id not in g.rails:
+                continue
+            if self.fallback_giant_ring:
+                # an earlier rail's persistent failure within THIS barrier
+                # demoted the whole job (§4.2): the remaining rails join
+                # the static giant ring instead of the requested topology,
+                # so every rail of the job stays consistent
+                ack = max(ack, self._apply_giant_ring(o, now))
+                reconfigured = True
                 continue
             new_topo = self.topo[o.rail_id].with_ways(ways, g.digit)
             if new_topo == self.topo[o.rail_id]:
                 continue
             done = self._dispatch(o, new_topo, now, ocs_fail)
-            self.topo[o.rail_id] = new_topo
+            if not self.fallback_giant_ring:
+                # on fallback the rail runs the static giant ring, NOT the
+                # requested topology — recording new_topo would make
+                # telemetry claim circuits the OCS never programmed
+                self.topo[o.rail_id] = new_topo
             ack = max(ack, done)
             reconfigured = True
         acked = tuple(g.waiting)

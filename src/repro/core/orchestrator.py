@@ -96,25 +96,35 @@ class RailOrchestrator:
         ways = affected_ways(st.topo, new_topo)
         if not ways:
             return now
-        disconnect: List[int] = []
-        connect: List[Tuple[int, int]] = []
+        # PP pairs may duplicate across adjacent ways (a way shares its src
+        # ports with the stage it feeds); dedupe BOTH sides so
+        # n_ports_programmed counts each port once, and assert the dropped
+        # duplicates are consistent (same src never wired to two dsts).
+        disco: set = set()
         for w in ways:
-            old_sm = st.submaps[w]
-            disconnect.extend(sorted({a for a, _ in old_sm.pairs}))
+            disco.update(a for a, _ in st.submaps[w].pairs)
+        dst_of: Dict[int, int] = {}
+        conn: List[Tuple[int, int]] = []
         for w in ways:
             new_sm = build_submapping(st.placement, new_topo, w)
             st.submaps[w] = new_sm
-            connect.extend(new_sm.pairs)
-        # PP pairs may duplicate across adjacent ways; dedupe by src port
-        seen = set()
-        conn = []
-        for a, b in connect:
-            if a not in seen:
-                seen.add(a)
+            for a, b in new_sm.pairs:
+                if a in dst_of:
+                    assert dst_of[a] == b, \
+                        f"way overlap wires port {a} to both {dst_of[a]} " \
+                        f"and {b}"
+                    continue
+                dst_of[a] = b
                 conn.append((a, b))
+        # every re-wired src must have been disconnected first or be free:
+        # a connect of a port that stays live in an untouched way is a
+        # G-invariant violation the OCS would reject mid-flight.
+        live = {a for w, sm in st.submaps.items() if w not in ways
+                for a, _ in sm.pairs}
+        assert not (set(dst_of) & live), sorted(set(dst_of) & live)
         st.topo = new_topo
         self.n_reconfig_events += 1
-        done = self.ocs.program(disconnect, conn, now)
+        done = self.ocs.program(sorted(disco), conn, now)
         return done
 
     def storage_entries(self) -> int:

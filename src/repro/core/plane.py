@@ -1,0 +1,215 @@
+"""Unified control-plane façade (paper §4.1 Fig 7, end to end).
+
+``ControlPlane`` wires the REAL control-plane state machines — one
+:class:`~repro.core.shim.Shim` per scale-out rank, the per-job
+:class:`~repro.core.controller.Controller`, one
+:class:`~repro.core.orchestrator.RailOrchestrator` +
+:class:`~repro.core.orchestrator.OCSDriver` per rail — from a single
+:class:`~repro.core.phases.JobConfig`, and exposes the narrow event API the
+simulator (and any future scenario driver) programs against:
+
+    plane = ControlPlane(job, n_rails=1, ocs_latency=0.1)
+    plane.profile(ops)                       # §4.2 profiling iterations
+    ev = plane.pre_comm(rank, op, now=t)     # Algorithm 1
+    ev = plane.post_comm(rank, op, now=t)    # Algorithm 2
+    plane.telemetry()                        # barriers/dispatches/ports/...
+
+Every simulated number — reconfiguration counts, barrier counts, ports
+programmed, giant-ring fallback — is an EMERGENT property of these
+machines, never re-derived analytically (DESIGN.md §3).
+
+Placement model: the job's scale-out ranks are laid out way-major,
+``rank = way * per_way + ((c * ep) + e) * fsdp + f`` for FSDP coordinate
+``f``, CP ``c``, EP ``e`` — so each symmetric dimension forms contiguous
+rings on every rail, and every rank owns port ``rank`` on each rail (one
+NIC per rail, paper Fig 1).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.controller import Controller, GroupState, WriteResult
+from repro.core.orchestrator import OCSDriver, RailOrchestrator
+from repro.core.phases import SYM_DIGITS, CommOp, JobConfig
+from repro.core.shim import DEFAULT, PROVISIONING, Action, Shim
+from repro.core.topo import JobPlacement, PP_DIGIT, TopoId
+
+
+@dataclass(frozen=True)
+class PlaneEvent:
+    """What one shim did for one op at one timestamp."""
+
+    rank: int
+    uid: int
+    actions: Tuple[Action, ...]
+    network: str = ""                 # selected data plane, if any
+    waited: bool = False              # hit the topology lock (G1)
+    write: Optional[WriteResult] = None   # completed/pending barrier state
+
+
+def _scale_out_dims(job: JobConfig) -> Dict[str, int]:
+    """Scale-out parallelism degrees, in placement (minor-to-major) order."""
+    return {"fsdp": job.fsdp, "cp": job.cp, "ep": job.ep}
+
+
+def build_placement(job: JobConfig, job_id: str = "job0") -> JobPlacement:
+    """One rail's port map for ``job`` (identical on every rail)."""
+    fsdp, cp, ep = job.fsdp, job.cp, job.ep
+    per_way = fsdp * cp * ep
+    ports_by_way = tuple(
+        tuple(range(w * per_way, (w + 1) * per_way))
+        for w in range(job.pp))
+
+    def port(w: int, f: int, c: int, e: int) -> int:
+        return w * per_way + (c * ep + e) * fsdp + f
+
+    sym: Dict[int, Dict[int, List[Tuple[int, ...]]]] = {}
+    # digit 1: FSDP/DP rings (one per (cp, ep) coordinate and way)
+    sym[1] = {w: [tuple(port(w, f, c, e) for f in range(fsdp))
+                  for c in range(cp) for e in range(ep)]
+              for w in range(job.pp)}
+    # digit 2: CP rings (one per (fsdp, ep) coordinate and way)
+    sym[2] = {w: [tuple(port(w, f, c, e) for c in range(cp))
+                  for f in range(fsdp) for e in range(ep)]
+              for w in range(job.pp)}
+    # digit 3: EP rings (one per (fsdp, cp) coordinate and way)
+    sym[3] = {w: [tuple(port(w, f, c, e) for e in range(ep))
+                  for f in range(fsdp) for c in range(cp)]
+              for w in range(job.pp)}
+    return JobPlacement(job_id, ports_by_way, sym)
+
+
+class ControlPlane:
+    """The whole paper-§4 control plane behind one constructor.
+
+    Scenario knobs (multi-job sharing, fault injection, OCS-latency
+    sweeps) are constructor parameters, not new code paths:
+
+      n_rails       rails (OCS + orchestrator pairs) the job spans
+      ocs_latency   per-reconfiguration OCS switching time (seconds)
+      nic_linkup    additive NIC firmware link-up penalty (§5.1)
+      mode          shim mode: ``DEFAULT`` (on-demand, Alg 1) or
+                    ``PROVISIONING`` (speculative, Alg 2 / O2)
+      ocs_fail      fault injector ``(attempt) -> bool``; persistent
+                    failure triggers the §4.2 giant-ring fallback
+    """
+
+    def __init__(self, job: JobConfig, *, n_rails: int = 1,
+                 ocs_latency: float = 0.0, nic_linkup: float = 0.0,
+                 mode: str = DEFAULT, timeout: float = 1.0,
+                 max_retries: int = 3,
+                 ocs_fail: Optional[Callable[[int], bool]] = None,
+                 job_id: str = "job0",
+                 listeners: Sequence[Callable] = ()):
+        assert n_rails >= 1, "a job spans at least one rail"
+        self.job = job
+        self.job_id = job_id
+        self.placement = build_placement(job, job_id)
+        self.n_ranks = job.pp * job.fsdp * job.cp * job.ep
+        self.n_ways = job.pp
+        self.ocs_fail = ocs_fail
+        self.listeners = list(listeners)
+
+        self.orchestrators: List[RailOrchestrator] = []
+        initial = TopoId.uniform(self.n_ways, 1)
+        for r in range(n_rails):
+            ocs = OCSDriver(n_ports=self.n_ranks,
+                            reconfig_latency=ocs_latency + nic_linkup)
+            orch = RailOrchestrator(r, ocs)
+            orch.register_job(self.placement, initial)
+            self.orchestrators.append(orch)
+        self.controller = Controller(job_id, self.n_ways,
+                                     self.orchestrators, timeout=timeout,
+                                     max_retries=max_retries)
+        self.shims = [Shim(rank, mode=mode) for rank in range(self.n_ranks)]
+        # per-(group, rank) write counters: rank r's k-th write to group g
+        # carries barrier index k — every shim replays the same SPMD op
+        # stream, so the counters stay aligned with the controller's
+        # per-group in-flight index across iterations.
+        self._wseq: Dict[str, List[int]] = {}
+
+    # -- profiling (§4.2) ----------------------------------------------------
+    def profile(self, ops: Sequence[CommOp]) -> None:
+        """One traced iteration: fill every shim's phase table and register
+        the communication groups in the controller's CTR table.
+
+        The op stream is SPMD — every shim derives the SAME table — so it
+        is built once and shared (entries are immutable)."""
+        from repro.core.shim import table_from_ops
+        table = table_from_ops(ops)
+        for s in self.shims:
+            s.phase_table = table
+            s.restart()
+        dims = {op.dim for op in ops if op.scale == "scale_out"}
+        ways = tuple(range(self.n_ways))
+        rails = tuple(o.rail_id for o in self.orchestrators)
+        for dim in sorted(dims):
+            if dim in self.controller.groups:
+                continue
+            digit = PP_DIGIT if dim == "pp" else SYM_DIGITS.get(dim, 1)
+            self.controller.register_group(GroupState(
+                dim, dim, digit, size=self.n_ranks, rails=rails, ways=ways))
+            self._wseq.setdefault(dim, [0] * self.n_ranks)
+
+    def start_iteration(self) -> None:
+        """Rewind the shims' phase-table walk for the next iteration."""
+        for s in self.shims:
+            s.restart()
+
+    # -- event API (Algorithms 1-2) -----------------------------------------
+    def pre_comm(self, rank: int, op: CommOp, now: float = 0.0) -> PlaneEvent:
+        return self._exec(rank, op, self.shims[rank].pre_comm(op), now)
+
+    def post_comm(self, rank: int, op: CommOp,
+                  now: float = 0.0) -> PlaneEvent:
+        return self._exec(rank, op, self.shims[rank].post_comm(op), now)
+
+    def _exec(self, rank: int, op: CommOp, acts: List[Action],
+              now: float) -> PlaneEvent:
+        network = ""
+        waited = False
+        write: Optional[WriteResult] = None
+        for a in acts:
+            if a.kind == "select_network":
+                network = a.network
+            elif a.kind == "wait_topology":
+                waited = True
+            elif a.kind == "topo_write":
+                seq = self._wseq[a.group_id][rank]
+                self._wseq[a.group_id][rank] = seq + 1
+                write = self.controller.topo_write(
+                    rank, a.group_id, seq, asym_way=a.asym_way, now=now,
+                    ocs_fail=self.ocs_fail, ways=a.ways)
+                if write.complete:
+                    for fn in self.listeners:
+                        fn(self, a.group_id, write, now)
+        return PlaneEvent(rank, op.uid, tuple(acts), network, waited, write)
+
+    # -- observability -------------------------------------------------------
+    @property
+    def fallback_giant_ring(self) -> bool:
+        return self.controller.fallback_giant_ring
+
+    def telemetry(self) -> Dict[str, object]:
+        """Aggregate counters from every component — the simulator's ONLY
+        source for reconfig/overhead accounting."""
+        c = self.controller
+        return {
+            "n_barriers": c.n_barriers,
+            "n_dispatches": c.n_dispatches,
+            "n_topo_writes": sum(s.n_topo_writes for s in self.shims),
+            "n_waits": sum(s.n_waits for s in self.shims),
+            "n_reconfig_events": sum(o.n_reconfig_events
+                                     for o in self.orchestrators),
+            "n_program_calls": sum(o.ocs.n_program_calls
+                                   for o in self.orchestrators),
+            "n_ports_programmed": sum(o.ocs.n_ports_programmed
+                                      for o in self.orchestrators),
+            "storage_entries": sum(o.storage_entries()
+                                   for o in self.orchestrators),
+            "fallback_giant_ring": c.fallback_giant_ring,
+            "failure_log": list(c.failure_log),
+            "topo": {o.rail_id: c.topo[o.rail_id].digits
+                     for o in self.orchestrators},
+        }

@@ -31,6 +31,10 @@ class Action:
     group_id: str = ""           # for topo_write
     idx: int = -1
     asym_way: int = -1
+    # ways the write configures: the full phase-table entry at a boundary
+    # (one write programs the whole phase's topology), the op's own way for
+    # mid-phase per-op PP writes.  () = use the controller group's default.
+    ways: Tuple[int, ...] = ()
 
 
 @dataclass
@@ -85,12 +89,23 @@ class Shim:
         return e is not None and op.uid == e.end_uid
 
     def get_next_comm(self, op: CommOp) -> Tuple[int, int]:
-        """(next stage's first op uid, stage index) for provisioning."""
-        if self.phase_change_after(op) and \
-                self.comm_stage + 1 < len(self.phase_table):
-            nxt = self.phase_table[self.comm_stage + 1]
-            return nxt.start_uid, self.comm_stage + 1
+        """(next stage's first op uid, stage index) for provisioning.
+
+        The profiled table is CYCLIC: steady-state training repeats the
+        iteration, so the stage after the last wraps to stage 0 — the
+        wrap-around write provisions the next iteration's first phase
+        inside the current iteration's trailing window (§4.2).
+        """
+        if self.phase_change_after(op) and self.phase_table:
+            n_stage = (self.comm_stage + 1) % len(self.phase_table)
+            return self.phase_table[n_stage].start_uid, n_stage
         return op.uid + 1, self.comm_stage
+
+    def restart(self):
+        """Rewind the phase-table walk for the next iteration (the table,
+        topology lock and telemetry persist)."""
+        self.comm_stage = 0
+        self.idx = 0
 
     # -- Algorithm 1: PRE_COMM ----------------------------------------------
     def pre_comm(self, op: CommOp) -> List[Action]:
@@ -105,8 +120,10 @@ class Shim:
             acts.append(Action("wait_topology"))
         shift = self.phase_change_before(op)
         if self.mode == DEFAULT and (shift or op.dim == "pp"):
-            acts.append(Action("topo_write", group_id=self._gid(op),
-                               idx=op.uid, asym_way=op.way))
+            e = self._entry()
+            acts.append(Action("topo_write", group_id=self._gid(op.dim),
+                               idx=op.uid, asym_way=op.way,
+                               ways=e.ways if (shift and e) else (op.way,)))
             self.n_topo_writes += 1
         if shift:
             self.topology_busy = True
@@ -123,13 +140,17 @@ class Shim:
         if self.mode == PROVISIONING and \
                 (shift or op.dim == "pp"):
             n_uid, n_stage = self.get_next_comm(op)
+            # phase shifts wrap cyclically; a mid-phase pp op streamed
+            # PAST the final shift (caller continuing without restart())
+            # has comm_stage == len(table) and nothing left to provision
             if n_stage < len(self.phase_table):
                 nxt = self.phase_table[n_stage]
                 acts.append(Action("topo_write",
-                                   group_id=f"{nxt.dim}",
+                                   group_id=self._gid(nxt.dim),
                                    idx=n_uid,
                                    asym_way=nxt.ways[0] if nxt.dim == "pp"
-                                   else -1))
+                                   else -1,
+                                   ways=nxt.ways))
                 self.n_topo_writes += 1
         if shift:
             self.topology_busy = False
@@ -137,5 +158,8 @@ class Shim:
         return acts
 
     @staticmethod
-    def _gid(op: CommOp) -> str:
-        return op.dim
+    def _gid(dim: str) -> str:
+        """Group-id derivation — the ONE place a dim maps to a controller
+        group, shared by the default (pre_comm) and provisioning
+        (post_comm) write paths so the two modes cannot drift."""
+        return dim

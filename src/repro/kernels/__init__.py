@@ -1,3 +1,16 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# ``pltpu.CompilerParams`` is the current spelling of the 0.4.x-era
+# ``TPUCompilerParams``; alias it so the kernels use one name on either
+# pallas version.  A failing pallas-TPU import must not take down the
+# pure-reference path (repro.kernels.ref needs no pallas at all).
+try:
+    from jax.experimental.pallas import tpu as _pltpu
+except ImportError:
+    pass
+else:
+    if not hasattr(_pltpu, "CompilerParams") and \
+            hasattr(_pltpu, "TPUCompilerParams"):
+        _pltpu.CompilerParams = _pltpu.TPUCompilerParams

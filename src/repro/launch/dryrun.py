@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat  # noqa: F401  (jax API aliases)
 from repro.analysis import flops as flopsa
 from repro.analysis import memmodel
 from repro.analysis.hlo_cost import corrected_cost
@@ -140,6 +141,20 @@ def input_specs(arch: str, shape_name: str, mesh, fabric: str = "photonic"):
     return step, (params, state, token, pos)
 
 
+def plane_record(cfg, shape: ShapeConfig, axis_sizes) -> dict:
+    """Control-plane profile of this cell's job: one steady-state
+    iteration through the real Shim/Controller/Orchestrator stack
+    (via opus_sim.mesh_plane_profile — same mapping as train.py
+    --plane-report), recorded next to the roofline so capacity planning
+    sees compute AND reconfiguration cost per cell."""
+    from repro.sim.opus_sim import mesh_plane_profile
+    if shape.kind != "train":
+        return {"skipped": "control plane profiles training cells only"}
+    return mesh_plane_profile(cfg, axis_sizes,
+                              global_batch=shape.global_batch,
+                              seq_len=shape.seq_len)
+
+
 def model_flops_for(cfg, shape: ShapeConfig) -> float:
     tokens = shape.global_batch * shape.seq_len
     if shape.kind == "train":
@@ -217,6 +232,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
                 "n_while": cc.n_while,
                 "collectives": cc.collective_bytes,
                 "roofline": rl.row(),
+                "control_plane": plane_record(cfg, shape, axis_sizes),
             }
     except Exception as e:
         rec = {"cell": cell_id, "status": "error",

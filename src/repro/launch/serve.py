@@ -11,6 +11,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import compat  # noqa: F401  (jax API aliases)
 from repro.configs.base import get_config
 from repro.launch.train import parse_mesh
 from repro.models import transformer as tf

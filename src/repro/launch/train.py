@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding
 
+from repro import compat  # noqa: F401  (jax API aliases)
 from repro.configs.base import get_config
 from repro.launch.mesh import make_test_mesh
 from repro.models import transformer as tf
@@ -50,6 +51,12 @@ def main(argv=None):
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--plane-report", action="store_true",
+                    help="after training, replay this job's schedule "
+                         "through the real photonic control plane "
+                         "(repro.core.plane) and print its telemetry")
+    ap.add_argument("--ocs-latency", type=float, default=0.05,
+                    help="OCS reconfiguration latency for --plane-report")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -87,7 +94,33 @@ def main(argv=None):
                 print(f"checkpointed @ {step + 1}")
         if args.ckpt:
             ckpt.save(args.ckpt, params, opt, ef, extra={"step": args.steps})
+    if args.plane_report:
+        plane_report(cfg, mesh, args.batch, args.seq, args.ocs_latency)
     return float(m["loss"])
+
+
+def plane_report(cfg, mesh, global_batch: int, seq_len: int,
+                 ocs_latency: float):
+    """What the photonic control plane would do for this training job:
+    one simulated steady-state iteration through the REAL Shim /
+    Controller / RailOrchestrator stack (same mesh -> JobConfig mapping
+    as launch/dryrun.py records, via opus_sim.mesh_plane_profile)."""
+    from repro.sim.opus_sim import mesh_plane_profile
+
+    ax = dict(zip(mesh.axis_names, mesh.devices.shape))
+    p = mesh_plane_profile(cfg, ax, global_batch=global_batch,
+                           seq_len=seq_len, ocs_latency=ocs_latency)
+    print(f"control plane report (TP={p['tp']} FSDP={p['fsdp']}, "
+          f"OCS {ocs_latency*1e3:.0f} ms):")
+    over = p["overhead_vs_native"]
+    print(f"  modeled step {p['modeled_step_s']:.4g}s "
+          + (f"({100*over:.2f}% over native EPS), " if over is not None
+             else "(TP-only: no scale-out traffic), ")
+          + f"{p['n_reconfigs']} reconfigs")
+    print(f"  {p['n_barriers']} barriers, {p['n_dispatches']} dispatches, "
+          f"{p['n_topo_writes']} topo_writes, "
+          f"{p['n_ports_programmed']} ports programmed")
+    return p
 
 
 if __name__ == "__main__":

@@ -48,6 +48,14 @@ class ReconfigurableBackend:
         self.n_reconfigs = 0
         self.n_rejections = 0
 
+    def register_candidate(self, topo_id: int, matrix: np.ndarray):
+        """Add (or replace) a circuit configuration at runtime — used by
+        the ControlPlane bridge, which discovers topologies as the real
+        orchestrators program them."""
+        m = np.asarray(matrix, dtype=float)
+        assert m.shape == (self.cfg.n_ranks, self.cfg.n_ranks), m.shape
+        self.candidates[topo_id] = m
+
     # -- reconfiguration ----------------------------------------------------
     def reconfigure(self, topo_id: int, now: float) -> float:
         """Switch the active matrix.  Returns completion time."""
@@ -137,3 +145,41 @@ def full_matrix(n: int, gbps: float) -> np.ndarray:
     m = np.full((n, n), gbps)
     np.fill_diagonal(m, 0.0)
     return m
+
+
+# ---------------------------------------------------------------------------
+# ControlPlane bridge (the "hooks" side of repro.core.plane)
+# ---------------------------------------------------------------------------
+
+
+class PlaneBackendBridge:
+    """Mirrors real ControlPlane reconfigurations into this backend.
+
+    Register via ``ControlPlane(..., listeners=[bridge.listener])`` (or
+    append to ``plane.listeners``): every completed topo_write barrier
+    that actually reprogrammed a rail is replayed as a
+    ``reconfigure(topo_id, now)`` on the analytical backend, with the
+    bandwidth matrix derived from the rail-0 OCS circuit table at that
+    instant.  G1/G2 rejection semantics therefore apply to the real
+    control plane's dispatch stream.
+    """
+
+    def __init__(self, cfg: NetConfig, link_gbps: Optional[float] = None):
+        self.backend = ReconfigurableBackend(cfg, {})
+        self.link_gbps = link_gbps if link_gbps is not None else cfg.link_gbps
+        self.n_applied = 0
+
+    GIANT_RING_ID = -1   # fallback circuits match no TopoId encoding
+
+    def listener(self, plane, group_id: str, write, now: float):
+        if not write.reconfigured:
+            return
+        rail = plane.orchestrators[0]
+        tid = (self.GIANT_RING_ID if plane.fallback_giant_ring
+               else plane.controller.topo[rail.rail_id].encode())
+        pairs = sorted(rail.ocs.circuits.items())
+        self.backend.register_candidate(
+            tid, pairs_matrix(self.backend.cfg.n_ranks, pairs,
+                              self.link_gbps))
+        self.backend.reconfigure(tid, now)
+        self.n_applied += 1

@@ -20,6 +20,20 @@ Modes
             max(0, T_reconfig - T_window) (§4.2) plus the small async
             control residue.
 
+Engines (opus / opus_prov only; native / oneshot have no control plane)
+  event     DEFAULT.  Replays the timed workload through the REAL control
+            plane (``repro.core.plane.ControlPlane``): per-rank Shims emit
+            Action records, topo_writes run against the real Controller /
+            RailOrchestrator / OCSDriver, and every reconfiguration count
+            or exposure second is derived from their telemetry.  Two
+            iterations are replayed — the first warms the topology into
+            its cyclic steady state (the §4.2 profiling iterations), the
+            second is measured.
+  analytic  The original closed-form model (digit-diff reconfig counting,
+            inlined exposure formulas), kept as a cross-check; the parity
+            contract with the event engine is tested in
+            tests/test_plane.py and documented in DESIGN.md §4.
+
 Reconfiguration counting matches core.phases.count_reconfigs (digit-diff
 at the controller); per-op PP topo_writes cost control time even when no
 digits change (paper Fig 11 right).
@@ -27,9 +41,11 @@ digits change (paper Fig 11 right).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core import phases as ph
+from repro.core.plane import ControlPlane
+from repro.core.shim import DEFAULT, PROVISIONING
 from repro.core.windows import TimedOp, Window, windows_of
 from repro.sim.workload import GPUSpec, TimedWorkload
 
@@ -53,6 +69,7 @@ class SimParams:
     ctrl_sync: Optional[float] = None
     ctrl_async: Optional[float] = None  # provisioning residue (~sync/8)
     nic_linkup: float = 0.0       # §5.1 firmware link-up penalty knob
+    n_rails: int = 1              # rails (OCS instances) the job spans
 
     def resolved(self, n_ranks: int) -> Tuple[float, float]:
         import math
@@ -74,6 +91,8 @@ class SimResult:
     exposed_reconfig: float       # reconfig seconds on the critical path
     exposed_control: float
     timeline: List[TimedOp] = field(default_factory=list)
+    engine: str = "analytic"
+    telemetry: Optional[Dict[str, object]] = None  # ControlPlane.telemetry()
 
     def windows(self) -> List[Window]:
         return windows_of(self.timeline)
@@ -94,7 +113,181 @@ def _static_split(job: ph.JobConfig) -> Dict[str, float]:
     return {d: r / z for d, r in roots.items()}
 
 
-def simulate(wl: TimedWorkload, params: SimParams) -> SimResult:
+def _giant_ring_dilation(job: ph.JobConfig) -> Dict[str, float]:
+    """Per-dim effective-bandwidth factor on the §4.2 fallback ring.
+
+    The fallback is ONE static cycle over all N scale-out ports.  A ring
+    collective over a k-rank subgroup must forward its traffic through the
+    N-k non-members sitting on the cycle, inflating per-link bytes by
+    ~N/k — so each dim sees ~k/N of the NIC, strictly worse than both the
+    healthy reconfigured fabric and the per-dim one-shot split.
+    """
+    n = max(job.fsdp * job.cp * job.ep * job.pp, 1)
+    ring = {"fsdp": job.fsdp, "dp": job.fsdp, "cp": job.cp, "ep": job.ep,
+            "pp": 2}
+    return {d: max(min(k, n) / n, 1e-3) for d, k in ring.items()}
+
+
+def simulate(wl: TimedWorkload, params: SimParams, *,
+             engine: Optional[str] = None,
+             ocs_fail: Optional[Callable[[int], bool]] = None) -> SimResult:
+    """Simulate one steady-state iteration.
+
+    ``engine`` selects the opus-mode implementation: ``"event"`` (default)
+    drives the real control plane, ``"analytic"`` the closed-form
+    cross-check.  ``ocs_fail`` is the event engine's fault injector
+    (``attempt -> bool``; persistent True triggers the §4.2 giant-ring
+    fallback).
+    """
+    if params.mode in ("native", "oneshot"):
+        assert ocs_fail is None, \
+            f"fault injection is meaningless for mode={params.mode!r}"
+        return _simulate_analytic(wl, params)
+    eng = engine if engine is not None else "event"
+    if eng == "analytic":
+        assert ocs_fail is None, "fault injection needs the event engine"
+        return _simulate_analytic(wl, params)
+    if eng != "event":
+        raise ValueError(f"unknown engine {eng!r}")
+    return _simulate_event(wl, params, ocs_fail)
+
+
+# ---------------------------------------------------------------------------
+# event engine: the real control plane under a serialized rail timeline
+# ---------------------------------------------------------------------------
+
+
+def build_plane(job: ph.JobConfig, params: SimParams,
+                ocs_fail: Optional[Callable[[int], bool]] = None,
+                listeners=()) -> ControlPlane:
+    """The simulator's ControlPlane for (job, params) — exposed so callers
+    (benchmarks, launchers, scenario drivers) wire the exact same plane."""
+    mode = PROVISIONING if params.mode == "opus_prov" else DEFAULT
+    return ControlPlane(job, n_rails=params.n_rails,
+                        ocs_latency=params.ocs_latency,
+                        nic_linkup=params.nic_linkup, mode=mode,
+                        ocs_fail=ocs_fail, listeners=listeners)
+
+
+def _mgmt_op(op, t: float, t0: float, timeline: List[TimedOp]) -> float:
+    start = t
+    dur = MGMT_LAT + op.bytes_per_gpu * 8 / (MGMT_GBPS * 1e9)
+    timeline.append(TimedOp(op, start - t0, start + dur - t0))
+    return start + dur
+
+
+def _simulate_event(wl: TimedWorkload, params: SimParams,
+                    ocs_fail: Optional[Callable[[int], bool]]) -> SimResult:
+    job, gpu = wl.job, wl.gpu
+    plane = build_plane(job, params, ocs_fail)
+    plane.profile(wl.ops)
+    ctrl_sync, ctrl_async = params.resolved(job.n_gpus)
+    table = ph.build_phase_table(wl.ops)
+    phase_of: Dict[int, int] = {}
+    for pi, p in enumerate(table):
+        for uid in range(p.start_idx, p.end_idx + 1):
+            phase_of[uid] = pi
+    dilation = _giant_ring_dilation(job)  # fault fallback bw factors
+
+    t = 0.0
+    pending_ready: Optional[float] = None   # provisioned reconfig's ACK
+    step_time = 0.0
+    timeline: List[TimedOp] = []
+    n_reconfigs = n_writes = 0
+    exposed_r = exposed_c = 0.0
+    tel0: Dict[str, object] = {}
+    for iteration in range(2):            # warmup (profiling) + measured
+        plane.start_iteration()
+        if iteration == 1:
+            tel0 = plane.telemetry()      # measured-iteration deltas base
+        t0 = t
+        timeline = []
+        n_reconfigs = n_writes = 0
+        exposed_r = exposed_c = 0.0
+        prev_phase = -1
+        for op in wl.ops:
+            t += op.compute_before
+            if op.scale == "mgmt":
+                t = _mgmt_op(op, t, t0, timeline)
+                continue
+            if op.scale == "scale_up":
+                continue  # TP never touches the rails
+
+            pi = phase_of[op.uid]
+            new_phase = pi != prev_phase
+            if new_phase and pending_ready is not None:
+                # §4.2: a provisioned reconfiguration is exposed only past
+                # the window; split residue between control and OCS time
+                exp = max(0.0, pending_ready - t)
+                exposed_c += min(exp, ctrl_async)
+                exposed_r += max(0.0, exp - ctrl_async)
+                t = max(t, pending_ready)
+                pending_ready = None
+
+            # Algorithm 1 on every rank; the barrier completes at the last
+            write = None
+            for r in range(plane.n_ranks):
+                ev = plane.pre_comm(r, op, now=t)
+                if ev.write is not None and ev.write.complete:
+                    write = ev.write
+            if write is not None:
+                n_writes += 1
+                if write.reconfigured:
+                    # on-demand: barrier + OCS latency fully exposed
+                    n_reconfigs += 1
+                    exposed_c += ctrl_sync
+                    exposed_r += write.ack_time - t
+                    t = write.ack_time + ctrl_sync
+                else:
+                    # lock-free write (suppressed / per-op PP)
+                    exposed_c += PP_OP_CTRL
+                    t += PP_OP_CTRL
+
+            # the collective itself, at the mode's bandwidth
+            bw = gpu.scale_out_gbps
+            if plane.fallback_giant_ring:
+                # reduced-bandwidth static ring: a k-rank subgroup ring
+                # embedded in the N-port cycle dilutes every link by the
+                # forwarding hops, ~k/N effective bandwidth (DESIGN.md §5)
+                bw *= dilation.get(op.dim, 1.0)
+            start = t
+            t = start + wl.comm_time(op, bandwidth_gbps=bw)
+            timeline.append(TimedOp(op, start - t0, t - t0))
+            prev_phase = pi
+
+            # Algorithm 2 on every rank (provisioning writes ride here,
+            # dispatched after the async control residue)
+            write = None
+            for r in range(plane.n_ranks):
+                ev = plane.post_comm(r, op, now=t + ctrl_async)
+                if ev.write is not None and ev.write.complete:
+                    write = ev.write
+            if write is not None:
+                n_writes += 1
+                if write.reconfigured:
+                    n_reconfigs += 1
+                    pending_ready = write.ack_time
+                else:
+                    exposed_c += PP_OP_CTRL
+                    t += PP_OP_CTRL
+        step_time = t - t0
+    # plane telemetry counts the WHOLE plane lifetime (job registration +
+    # warmup + measured iteration); the "measured" sub-dict is the
+    # steady-state per-iteration delta
+    tel = plane.telemetry()
+    tel["measured"] = {k: tel[k] - tel0[k] for k in tel
+                       if isinstance(tel[k], int)
+                       and not isinstance(tel[k], bool)}
+    return SimResult(step_time, n_reconfigs, n_writes, exposed_r, exposed_c,
+                     timeline, engine="event", telemetry=tel)
+
+
+# ---------------------------------------------------------------------------
+# analytic engine: closed-form cross-check (pre-ControlPlane formulation)
+# ---------------------------------------------------------------------------
+
+
+def _simulate_analytic(wl: TimedWorkload, params: SimParams) -> SimResult:
     job, gpu = wl.job, wl.gpu
     n_ways = job.pp
     table = ph.build_phase_table(wl.ops)
@@ -127,10 +320,7 @@ def simulate(wl: TimedWorkload, params: SimParams) -> SimResult:
     for op in wl.ops:
         t += op.compute_before
         if op.scale == "mgmt":
-            start = t
-            dur = MGMT_LAT + op.bytes_per_gpu * 8 / (MGMT_GBPS * 1e9)
-            t = start + dur
-            timeline.append(TimedOp(op, start, t))
+            t = _mgmt_op(op, t, 0.0, timeline)
             continue
         if op.scale == "scale_up":
             continue  # TP never touches the rails
@@ -186,18 +376,55 @@ def simulate(wl: TimedWorkload, params: SimParams) -> SimResult:
         prev_phase_end = t
 
     return SimResult(t, n_reconfigs, n_writes, exposed_r, exposed_c,
-                     timeline)
+                     timeline, engine="analytic")
 
 
 def sweep_latency(wl: TimedWorkload, latencies: List[float],
                   modes: Tuple[str, ...] = ("native", "opus", "opus_prov"),
+                  engine: Optional[str] = None,
                   **kw) -> Dict[str, List[Tuple[float, float]]]:
     out: Dict[str, List[Tuple[float, float]]] = {m: [] for m in modes}
     for m in modes:
         for lat in latencies:
-            r = simulate(wl, SimParams(mode=m, ocs_latency=lat, **kw))
+            r = simulate(wl, SimParams(mode=m, ocs_latency=lat, **kw),
+                         engine=engine)
             out[m].append((lat, r.step_time))
     return out
+
+
+def mesh_plane_profile(model_cfg, axis_sizes: Dict[str, int], *,
+                       global_batch: int, seq_len: int, gpu: str = "h200",
+                       ocs_latency: float = 0.01) -> Dict[str, object]:
+    """Control-plane profile of a mesh-shaped training job — THE shared
+    mesh-axes -> JobConfig mapping used by ``launch/train.py
+    --plane-report`` and ``launch/dryrun.py`` cell records.
+
+    TP = the ``model`` axis; FSDP = ``data`` x ``pod``; one simulated
+    steady-state iteration through the real control plane (event engine).
+    Returns a JSON-safe summary dict.
+    """
+    from repro.sim.workload import build as build_wl
+    tp = axis_sizes.get("model", 1)
+    dp = axis_sizes.get("data", 1) * axis_sizes.get("pod", 1)
+    job = ph.JobConfig(model=model_cfg, tp=tp, fsdp=dp,
+                       global_batch=max(global_batch, dp), seq_len=seq_len)
+    wl = build_wl(job, gpu)
+    nat = simulate(wl, SimParams(mode="native")).step_time
+    r = simulate(wl, SimParams(mode="opus_prov", ocs_latency=ocs_latency))
+    m = r.telemetry["measured"]   # steady-state per-iteration counters
+    return {
+        "tp": tp, "fsdp": dp, "gpu": gpu,
+        "ocs_latency_s": ocs_latency,
+        "modeled_step_s": round(r.step_time, 6),
+        # TP-only job (fsdp == 1): no scale-out traffic, nothing to compare
+        "overhead_vs_native": (round(r.step_time / nat - 1, 6)
+                               if nat > 0 else None),
+        "n_reconfigs": r.n_reconfigs,
+        "n_topo_writes": r.n_topo_writes,
+        "n_barriers": m["n_barriers"],
+        "n_dispatches": m["n_dispatches"],
+        "n_ports_programmed": m["n_ports_programmed"],
+    }
 
 
 def analytical_estimate(wl: TimedWorkload, ocs_latency: float) -> float:

@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ModelConfig
 from repro.core.fabric import Fabric
 from repro.models import transformer as tf
@@ -196,6 +197,19 @@ def make_train_step(setup: TrainSetup, mesh, params_tpl):
     sharding metadata once.
     """
     if setup.fabric == "eps":
+        return _make_eps_step(setup, mesh)
+    if not compat.supports_partial_manual():
+        # old jaxlib: shard_map cannot keep the model axis GSPMD-auto while
+        # the rails are manual (see repro.compat).  Run the SAME math
+        # through the GSPMD path; ring-collective coverage stays with the
+        # full-manual fabric tests.  Compression needs the manual pod sync
+        # and is unavailable here.
+        import warnings
+        warnings.warn(
+            "photonic shard_map path needs partial-manual support "
+            "(jax >= 0.5); falling back to the GSPMD (eps) train step"
+            + (" — pod-gradient compression disabled"
+               if setup.compress_pod_grads else ""))
         return _make_eps_step(setup, mesh)
 
     cfg = setup.cfg

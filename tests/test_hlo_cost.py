@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.analysis.hlo_cost import corrected_cost
 from repro.core.fabric import Fabric
 
@@ -47,10 +48,15 @@ def test_xla_cost_analysis_undercounts_scans():
         y, _ = jax.lax.scan(body, x, None, length=10)
         return y
     x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
-    raw = jax.jit(f).lower(x, x).compile().cost_analysis()["flops"]
-    assert raw < 2 * 128 ** 3 * 2       # ~1x, not 10x
+    cost = jax.jit(f).lower(x, x).compile().cost_analysis()
+    if isinstance(cost, list):          # older jax: one entry per program
+        cost = cost[0]
+    assert cost["flops"] < 2 * 128 ** 3 * 2       # ~1x, not 10x
 
 
+@pytest.mark.skipif(not compat.supports_partial_manual(),
+                    reason="partial-manual shard_map unsupported on this "
+                           "jaxlib (see repro.compat)")
 def test_collective_bytes_in_scan(mesh8):
     fab = Fabric(("data",), (4,), "photonic")
 

@@ -1,0 +1,342 @@
+"""ControlPlane facade + event engine: parity contract, telemetry,
+end-to-end §4.2 fault path, and the orchestrator accounting fixes."""
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.orchestrator import OCSDriver, RailOrchestrator
+from repro.core.phases import JobConfig, iteration_schedule
+from repro.core.plane import ControlPlane, build_placement
+from repro.core.shim import DEFAULT, PROVISIONING
+from repro.core.topo import JobPlacement, TopoId
+from repro.sim.opus_sim import SimParams, simulate
+from repro.sim.workload import build
+
+CFG = get_config("llama3_8b")
+CONFIG1 = JobConfig(model=CFG, tp=4, fsdp=2, pp=2, global_batch=16,
+                    seq_len=8192)
+CONFIG2 = JobConfig(model=CFG, tp=4, fsdp=8, pp=2, global_batch=64,
+                    seq_len=8192)
+CONFIG3 = JobConfig(model=get_config("deepseek_v3_16b"), tp=4, fsdp=1,
+                    pp=4, global_batch=8, seq_len=2048)
+TESTBED = JobConfig(model=CFG.replace(n_layers=6), tp=2, fsdp=2, pp=2,
+                    global_batch=2, seq_len=2048, zero3=False)
+
+
+# ---------------------------------------------------------------------------
+# the parity contract: event engine == analytic cross-check (DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("job", [CONFIG1, CONFIG2, CONFIG3, TESTBED],
+                         ids=["config1", "config2", "config3", "testbed"])
+@pytest.mark.parametrize("lat", [0.01, 0.1])
+@pytest.mark.parametrize("mode", ["opus", "opus_prov"])
+def test_event_analytic_parity(job, lat, mode):
+    wl = build(job, "a100")
+    p = SimParams(mode=mode, ocs_latency=lat)
+    a = simulate(wl, p, engine="analytic")
+    e = simulate(wl, p, engine="event")
+    assert e.engine == "event" and a.engine == "analytic"
+    assert abs(e.step_time - a.step_time) / a.step_time < 1e-6
+    assert e.n_reconfigs == a.n_reconfigs
+    assert e.n_topo_writes == a.n_topo_writes
+    assert abs(e.exposed_reconfig - a.exposed_reconfig) < 1e-9
+
+
+def test_default_engine_is_event_and_drives_real_machinery():
+    """Acceptance: the default path executes the real Shim/Controller/
+    RailOrchestrator objects — their telemetry proves it."""
+    wl = build(CONFIG1, "a100")
+    r = simulate(wl, SimParams(mode="opus", ocs_latency=0.05))
+    assert r.engine == "event"
+    t = r.telemetry
+    assert t is not None
+    assert t["n_barriers"] > 0            # Controller.n_barriers
+    assert t["n_program_calls"] > 0       # OCSDriver.n_program_calls
+    assert t["n_topo_writes"] > 0         # Shim counters
+    assert t["n_reconfig_events"] > 0     # RailOrchestrator counters
+    assert not t["fallback_giant_ring"]
+
+
+def test_n_rails_scales_dispatches_not_step_time():
+    """Multi-rail: every rail reprograms (more dispatches), rails switch in
+    parallel so the exposed latency is unchanged."""
+    wl = build(CONFIG1, "a100")
+    r1 = simulate(wl, SimParams(mode="opus", ocs_latency=0.05, n_rails=1))
+    r2 = simulate(wl, SimParams(mode="opus", ocs_latency=0.05, n_rails=2))
+    assert abs(r1.step_time - r2.step_time) < 1e-9
+    assert r2.telemetry["n_dispatches"] == 2 * r1.telemetry["n_dispatches"]
+
+
+# ---------------------------------------------------------------------------
+# §4.2 fault path, end to end through the plane
+# ---------------------------------------------------------------------------
+
+
+def test_fault_path_giant_ring_end_to_end():
+    """Persistent OCS failure -> giant-ring fallback -> later topo_writes
+    are no-ops -> telemetry reflects reduced-bandwidth mode."""
+    wl = build(CONFIG1, "a100")
+    p = SimParams(mode="opus", ocs_latency=0.01)
+    ok = simulate(wl, p)
+    bad = simulate(wl, p, ocs_fail=lambda attempt: True)
+    t = bad.telemetry
+    assert t["fallback_giant_ring"]
+    assert any("giant ring" in s for s in t["failure_log"])
+    # after the fallback no further reconfigurations are dispatched: the
+    # measured (second) iteration sees zero reconfigs, and the whole run
+    # programmed the OCS exactly twice (initial mapping + giant ring)
+    assert bad.n_reconfigs == 0
+    assert t["n_program_calls"] == 2
+    # barriers still synchronize (no-op writes complete)
+    assert t["n_barriers"] == ok.telemetry["n_barriers"]
+    # reduced-bandwidth mode: the k-in-N ring dilation makes the faulted
+    # fabric slower than the native baseline AND the healthy opus run
+    nat = simulate(wl, SimParams(mode="native")).step_time
+    assert bad.step_time > nat
+    assert bad.step_time > ok.step_time
+    # the controller must NOT claim the requested topology was applied
+    ring_digits = TopoId.uniform(CONFIG1.pp, 1).digits
+    assert all(d == ring_digits for d in t["topo"].values())
+
+
+def test_transient_fault_demotes_every_rail_consistently():
+    """A persistent failure on ONE rail mid-barrier demotes the whole job:
+    the other (healthy) rails join the giant ring instead of keeping the
+    requested topology (rails must never diverge)."""
+    wl = build(CONFIG1, "a100")
+    calls = {"n": 0}
+
+    def flaky(attempt):           # rail 0 exhausts retries, then heals
+        calls["n"] += 1
+        return calls["n"] <= 3
+    from repro.sim.opus_sim import build_plane
+    plane = build_plane(CONFIG1, SimParams(mode="opus", n_rails=2),
+                        ocs_fail=flaky)
+    plane.profile(wl.ops)
+    plane.start_iteration()
+    for op in wl.ops:
+        if op.scale != "scale_out":
+            continue
+        for r in range(plane.n_ranks):
+            plane.pre_comm(r, op, now=0.0)
+            plane.post_comm(r, op, now=0.0)
+        if plane.fallback_giant_ring:
+            break
+    assert plane.fallback_giant_ring
+    c0 = plane.orchestrators[0].ocs.circuits
+    c1 = plane.orchestrators[1].ocs.circuits
+    assert c0 == c1               # both rails run the SAME static ring
+    ports = sorted(plane.placement.all_ports)
+    assert sorted(c0) == ports    # and it is the full giant ring
+
+
+def test_provisioning_stream_without_restart_is_safe():
+    """Streaming a second iteration through post_comm WITHOUT calling
+    start_iteration() must not crash: mid-phase pp ops past the final
+    shift simply have nothing left to provision."""
+    plane = ControlPlane(CONFIG3, mode=PROVISIONING)   # pp-only job
+    ops = iteration_schedule(CONFIG3)
+    plane.profile(ops)
+    plane.start_iteration()
+    for _ in range(2):            # second pass: no restart on purpose
+        for op in ops:
+            if op.scale != "scale_out":
+                continue
+            for r in range(plane.n_ranks):
+                plane.pre_comm(r, op)
+                plane.post_comm(r, op)
+
+
+def test_giant_ring_circuit_connects_all_ports():
+    """The fallback programs one cycle over every job port."""
+    wl = build(CONFIG1, "a100")
+    from repro.sim.opus_sim import build_plane
+    plane = build_plane(CONFIG1, SimParams(mode="opus", ocs_latency=0.01),
+                        ocs_fail=lambda a: True)
+    plane.profile(wl.ops)
+    plane.start_iteration()
+    t = 0.0
+    for op in wl.ops:
+        if op.scale != "scale_out":
+            continue
+        for r in range(plane.n_ranks):
+            plane.pre_comm(r, op, now=t)
+            plane.post_comm(r, op, now=t)
+        if plane.fallback_giant_ring:
+            break
+    assert plane.fallback_giant_ring
+    ocs = plane.orchestrators[0].ocs
+    ports = sorted(plane.placement.all_ports)
+    seen, p = set(), ports[0]
+    for _ in range(len(ports)):
+        seen.add(p)
+        p = ocs.connected(p)
+    assert seen == set(ports)
+
+
+# ---------------------------------------------------------------------------
+# facade wiring / event API
+# ---------------------------------------------------------------------------
+
+
+def test_plane_wires_job_shaped_fabric():
+    plane = ControlPlane(CONFIG2, n_rails=2)
+    assert plane.n_ranks == CONFIG2.fsdp * CONFIG2.pp
+    assert len(plane.shims) == plane.n_ranks
+    assert len(plane.orchestrators) == 2
+    assert plane.controller.n_ways == CONFIG2.pp
+    # every rank owns one port per rail
+    assert len(plane.placement.all_ports) == plane.n_ranks
+
+
+def test_plane_profile_registers_groups():
+    plane = ControlPlane(CONFIG1)
+    ops = iteration_schedule(CONFIG1)
+    plane.profile(ops)
+    dims = {op.dim for op in ops if op.scale == "scale_out"}
+    assert set(plane.controller.groups) == dims
+    assert plane.controller.groups["pp"].digit == 0
+    assert plane.controller.groups["fsdp"].digit == 1
+
+
+def test_event_api_barrier_completes_on_last_rank():
+    plane = ControlPlane(CONFIG1)
+    ops = iteration_schedule(CONFIG1)
+    plane.profile(ops)
+    plane.start_iteration()
+    first = next(o for o in ops if o.scale == "scale_out")
+    events = [plane.pre_comm(r, first, now=0.0)
+              for r in range(plane.n_ranks)]
+    # all but the last rank leave the barrier pending
+    assert all(e.write is not None for e in events)
+    assert [e.write.complete for e in events] == \
+        [False] * (plane.n_ranks - 1) + [True]
+    assert events[-1].network == "rail"
+
+
+def test_provisioning_and_default_use_same_group_ids():
+    """Satellite regression: one group-id helper for both modes — the
+    controller must see the SAME group universe from either shim mode."""
+    ops = iteration_schedule(CONFIG1)
+
+    def groups_written(mode):
+        plane = ControlPlane(CONFIG1, mode=mode)
+        plane.profile(ops)
+        plane.start_iteration()
+        gids = set()
+        for op in ops:
+            if op.scale != "scale_out":
+                continue
+            for r in range(plane.n_ranks):
+                for ev in (plane.pre_comm(r, op), plane.post_comm(r, op)):
+                    gids.update(a.group_id for a in ev.actions
+                                if a.kind == "topo_write")
+        return gids
+
+    assert groups_written(DEFAULT) == groups_written(PROVISIONING)
+
+
+def test_provisioning_table_wraps_cyclically():
+    """Alg 2 provisions the NEXT iteration's first phase from the current
+    iteration's trailing window (steady-state training is cyclic)."""
+    plane = ControlPlane(CONFIG1, mode=PROVISIONING)
+    ops = iteration_schedule(CONFIG1)
+    plane.profile(ops)
+    plane.start_iteration()
+    last_write = None
+    for op in ops:
+        if op.scale != "scale_out":
+            continue
+        for r in range(plane.n_ranks):
+            plane.pre_comm(r, op)
+            ev = plane.post_comm(r, op)
+            for a in ev.actions:
+                if a.kind == "topo_write":
+                    last_write = a
+    table = plane.shims[0].phase_table
+    assert last_write is not None
+    assert last_write.group_id == table[0].dim   # wrapped to phase 0
+
+
+# ---------------------------------------------------------------------------
+# orchestrator accounting (satellite fix)
+# ---------------------------------------------------------------------------
+
+
+def _overlap_placement():
+    """Two identical sym groups per way: every connect/disconnect pair is
+    emitted twice by the way loop — programming must count each once."""
+    ports = ((0, 1, 2, 3),)
+    return JobPlacement("j", ports, {1: {0: [ports[0], ports[0]]},
+                                     2: {0: [ports[0]]}})
+
+
+def test_apply_dedupes_disconnect_and_connect():
+    ocs = OCSDriver(n_ports=8)
+    orch = RailOrchestrator(0, ocs)
+    orch.register_job(_overlap_placement(), TopoId((2,)))
+    before = ocs.n_ports_programmed
+    orch.apply("j", TopoId((1,)))       # digit 2 ring -> duplicated rings
+    # 4 disconnects + 4 connects, each port exactly once despite the
+    # duplicated sym group
+    assert ocs.n_ports_programmed - before == 8
+    assert sorted(ocs.circuits) == [0, 1, 2, 3]
+
+
+def test_apply_asserts_on_inconsistent_duplicate_srcs():
+    ports = ((0, 1, 2, 3),)
+    pl = JobPlacement("j", ports, {1: {0: [(0, 1, 2, 3), (0, 2, 1, 3)]},
+                                   2: {0: [ports[0]]}})
+    ocs = OCSDriver(n_ports=8)
+    orch = RailOrchestrator(0, ocs)
+    orch.register_job(pl, TopoId((2,)))
+    with pytest.raises(AssertionError):
+        orch.apply("j", TopoId((1,)))   # port 0 -> 1 vs 0 -> 2
+
+
+def test_backend_bridge_mirrors_plane_reconfigs():
+    """sim.network hook: real ControlPlane dispatches replay into the
+    analytical ReconfigurableBackend with circuit-accurate matrices."""
+    import numpy as np
+    from repro.sim.network import NetConfig, PlaneBackendBridge
+    from repro.sim.opus_sim import build_plane
+    wl = build(CONFIG1, "a100")
+    n_ranks = CONFIG1.fsdp * CONFIG1.pp
+    bridge = PlaneBackendBridge(NetConfig(n_ranks=n_ranks, link_gbps=100.0,
+                                          reconfig_latency=0.0))
+    plane = build_plane(CONFIG1, SimParams(mode="opus"),
+                        listeners=[bridge.listener])
+    plane.profile(wl.ops)
+    plane.start_iteration()
+    t = 0.0
+    for op in wl.ops:
+        if op.scale != "scale_out":
+            continue
+        t += 1.0
+        for r in range(plane.n_ranks):
+            plane.pre_comm(r, op, now=t)
+            plane.post_comm(r, op, now=t)
+    assert bridge.n_applied > 0
+    assert bridge.backend.n_reconfigs == bridge.n_applied
+    # the active matrix is exactly rail 0's OCS circuit table
+    ocs = plane.orchestrators[0].ocs
+    want = np.zeros((n_ranks, n_ranks))
+    for a, b in ocs.circuits.items():
+        want[a, b] = want[b, a] = 100.0
+    np.testing.assert_array_equal(bridge.backend.active, want)
+
+
+def test_placement_rings_cover_every_dim():
+    job = JobConfig(model=CFG, tp=2, fsdp=2, pp=2, cp=2, global_batch=16,
+                    seq_len=1024)
+    pl = build_placement(job)
+    assert pl.n_ways == 2
+    per_way = job.fsdp * job.cp * job.ep
+    assert len(pl.all_ports) == per_way * job.pp
+    # digit-1 (FSDP) rings: one per (cp, ep) coordinate per way
+    assert all(len(pl.sym_groups[1][w]) == job.cp * job.ep
+               for w in range(2))
+    # digit-2 (CP) rings: one per (fsdp, ep) coordinate per way
+    assert all(len(pl.sym_groups[2][w]) == job.fsdp * job.ep
+               for w in range(2))
