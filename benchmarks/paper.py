@@ -166,13 +166,15 @@ def bench_fault_fallback() -> Dict:
 def bench_sim_scale() -> Dict:
     """Figs 12-13: 80B models, latency & bandwidth sweeps, 64-2048 GPUs.
 
-    Sweeps use the analytic engine: at 2048 GPUs the event engine drives
-    hundreds of per-rank shims per op, and the parity test
-    (tests/test_plane.py) already pins the two engines together.
+    Every sweep point runs the EVENT engine — the real Shim/Controller/
+    RailOrchestrator stack — which the rank-equivalence-class plane
+    (DESIGN.md §8) makes tractable at 2048 GPUs: one representative shim
+    per pipeline way and one batched plane call per op instead of
+    2 x n_ranks per-rank calls.
     """
-    eng = "analytic"
     out = {}
-    print("== Figs 12-13: large-scale simulation (80B models) ==")
+    print("== Figs 12-13: large-scale simulation (80B models, "
+          "event engine) ==")
     setups = [
         ("LLaMA-80B/H200", get_config("llama_80b"), "h200", 8, 4, 4),
         ("GPT-80B/GB200", get_config("gpt_80b"), "gb200", 32, 4, 4),
@@ -186,8 +188,7 @@ def bench_sim_scale() -> Dict:
         print(f"  {name} ({job.n_gpus} GPUs): native={nat:.3f}s "
               f"ideal-oneshot={one/nat:.3f}x")
         for lat in (0.01, 0.1, 1.0):
-            p = simulate(wl, SimParams(mode="opus_prov", ocs_latency=lat),
-                         engine=eng)
+            p = simulate(wl, SimParams(mode="opus_prov", ocs_latency=lat))
             print(f"    lat={lat*1e3:5.0f} ms: +prov={p.step_time/nat:.4f}x "
                   f"vs EPS, {p.step_time/one:.4f}x vs one-shot")
             if lat == 0.1:
@@ -200,10 +201,9 @@ def bench_sim_scale() -> Dict:
             wl2 = dc.replace(wl, gpu=gpu2)
             nat2 = simulate(wl2, SimParams(mode="native")).step_time
             p2 = simulate(wl2, SimParams(mode="opus_prov",
-                                         ocs_latency=0.01),
-                          engine=eng).step_time
+                                         ocs_latency=0.01)).step_time
             print(f"    bw={bw:5d} Gbps @10ms: +prov={p2/nat2:.4f}x")
-    # DP scaling 64 -> 2048
+    # DP scaling 64 -> 2048, all through the real control plane
     print("  scaling (DP grows, TP/PP fixed):")
     for n_gpu, dp in [(64, 4), (256, 16), (1024, 64), (2048, 128)]:
         cfg = get_config("llama_80b")
@@ -212,9 +212,12 @@ def bench_sim_scale() -> Dict:
                            n_microbatch=2)
         wl = build(job, "h200")
         nat = simulate(wl, SimParams(mode="native")).step_time
-        p = simulate(wl, SimParams(mode="opus_prov", ocs_latency=0.01),
-                     engine=eng)
-        print(f"    {n_gpu:5d} GPUs: +prov={p.step_time/nat:.4f}x vs EPS")
+        p = simulate(wl, SimParams(mode="opus_prov", ocs_latency=0.01))
+        calls = p.telemetry["calls"]
+        print(f"    {n_gpu:5d} GPUs: +prov={p.step_time/nat:.4f}x vs EPS "
+              f"(event engine: {calls['n_classes']} classes for "
+              f"{calls['n_ranks']} ranks, "
+              f"{calls['n_plane_calls']} plane calls)")
         out[f"scale_{n_gpu}"] = p.step_time / nat
     return out
 

@@ -1,11 +1,17 @@
 """Benchmark driver: every paper table/figure + the roofline report.
 
     PYTHONPATH=src python -m benchmarks.run [--skip-roofline]
+    PYTHONPATH=src python -m benchmarks.run --perf   # BENCH_opus_sim.json
 
 Prints each paper artifact's reproduction and a summary block, then the
 roofline table assembled from results/dryrun/*.json (produced by
 launch/dryrun.py; cells missing from disk are reported as such, never
 recomputed here — benches must stay single-device-fast).
+
+``--perf`` times one 2048-GPU steady-state run through the event engine
+(the rank-equivalence-class control plane) and writes the wall-clock plus
+plane-call counters to ``BENCH_opus_sim.json`` so the perf trajectory is
+tracked across PRs; CI runs it after the smoke subset.
 """
 from __future__ import annotations
 
@@ -13,6 +19,7 @@ import argparse
 import glob
 import json
 import sys
+import time
 from pathlib import Path
 
 from benchmarks import paper
@@ -47,12 +54,60 @@ def roofline_report(dry_dir: str = "results/dryrun"):
     return {"ok": len(rows), "skipped": skipped, "errors": errors}
 
 
+def perf_report(out_path: str = "BENCH_opus_sim.json") -> dict:
+    """Wall-clock + plane-call counters of one 2048-GPU event-engine run
+    (2 iterations: warmup + measured), written as the cross-PR perf
+    record.  The paper's headline scale point (Figs 12-13, ≤6% overhead
+    at 2,048 GPUs) through the REAL control plane."""
+    from repro.configs.base import get_config
+    from repro.core import phases as ph
+    from repro.sim.opus_sim import SimParams, simulate
+    from repro.sim.workload import build
+
+    job = ph.JobConfig(model=get_config("llama_80b"), tp=8, fsdp=128, pp=2,
+                       global_batch=16 * 128, seq_len=4096, n_microbatch=2)
+    wl = build(job, "h200")
+    nat = simulate(wl, SimParams(mode="native")).step_time
+    t0 = time.perf_counter()
+    r = simulate(wl, SimParams(mode="opus_prov", ocs_latency=0.01))
+    wall = time.perf_counter() - t0
+    calls = dict(r.telemetry["calls"])
+    # the pre-collapse engine made one plane call per (rank, op, pre/post)
+    calls["per_rank_equiv_plane_calls"] = \
+        calls["n_plane_calls"] * calls["n_ranks"]
+    rec = {
+        "bench": "opus_sim_2048gpu_event_engine",
+        "n_gpus": job.n_gpus,
+        "engine": r.engine,
+        "wall_s": round(wall, 4),
+        "modeled_step_s": round(r.step_time, 6),
+        "overhead_vs_native": round(r.step_time / nat - 1, 6),
+        "n_reconfigs": r.n_reconfigs,
+        "plane_calls": calls,
+        "measured_telemetry": r.telemetry["measured"],
+    }
+    Path(out_path).write_text(json.dumps(rec, indent=2) + "\n")
+    print("== perf: 2048-GPU event-engine iteration ==")
+    print(f"  wall={wall:.3f}s  plane_calls={calls['n_plane_calls']} "
+          f"(per-rank equivalent: {calls['per_rank_equiv_plane_calls']}, "
+          f"{calls['n_ranks'] // calls['n_classes']}x collapse)")
+    print(f"  -> {out_path}")
+    return rec
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip-roofline", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI subset: smallest configs only")
+    ap.add_argument("--perf", action="store_true",
+                    help="write BENCH_opus_sim.json (2048-GPU event-engine "
+                         "wall-clock + plane-call counters) and exit")
     args = ap.parse_args()
+
+    if args.perf:
+        perf_report()
+        return 0
 
     headlines = {}
     for fn in (paper.SMOKE if args.smoke else paper.ALL):

@@ -34,8 +34,9 @@ def main():
     ap.add_argument("--fault", action="store_true",
                     help="inject a persistent OCS failure (§4.2 fallback)")
     ap.add_argument("--engine", default="event",
-                    choices=["event", "analytic"],
-                    help="event = drive the real control plane")
+                    choices=["event", "event_full", "analytic"],
+                    help="event = the real control plane collapsed to rank-"
+                         "equivalence classes; event_full = per-rank")
     args = ap.parse_args()
     if args.fault and args.engine == "analytic":
         ap.error("--fault needs the event engine (real control plane)")

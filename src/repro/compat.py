@@ -12,10 +12,11 @@ jax 0.4.x, where the same functionality exists under older names:
                                  auto = mesh axes - S
   jax.shard_map(check_vma=b)  -> check_rep=b
 
-Importing this module (done from ``repro/__init__.py``) installs the new
-names onto jax when missing, so the rest of the tree — and the tests, which
-use the new spellings directly — run unchanged on either version.  On a
-current jax every patch is a no-op.
+Importing this module (done by every jax-touching repro module —
+``repro/__init__.py`` itself stays jax-free) installs the new names onto
+jax when missing, so the rest of the tree — and the tests, which use the
+new spellings directly — run unchanged on either version.  On a current
+jax every patch is a no-op.
 """
 from __future__ import annotations
 

@@ -70,17 +70,33 @@ class Controller:
     def topo_write(self, rank: int, group_id: str, idx: int,
                    asym_way: int = -1, now: float = 0.0,
                    ocs_fail: Optional[Callable[[int], bool]] = None,
-                   ways: Optional[Sequence[int]] = None) -> WriteResult:
+                   ways: Optional[Sequence[int]] = None,
+                   weight: int = 1) -> WriteResult:
+        """One rank's (or rank-class representative's) barrier arrival.
+
+        ``weight`` is the rank-equivalence-class cardinality: the op stream
+        is SPMD, so ranks sharing a (way, group-role) coordinate issue
+        byte-identical writes and one representative write may stand in for
+        the whole class.  A barrier of size n therefore completes from k
+        class writes whose weights sum to n — the weighted-barrier
+        invariant (DESIGN.md §8).  ``weight=1`` is the uncollapsed per-rank
+        protocol and the two are observationally identical at the
+        controller (same barrier/dispatch sequence, same timestamps).
+        """
         g = self.groups[group_id]
         if idx != g.idx:
             # stale write (rank ahead/behind): queue semantics collapse to
             # asserting schedule agreement — a real deployment errors here
             raise ValueError(
                 f"rank {rank} wrote idx {idx}, controller at {g.idx}")
-        g.ready += 1
+        assert weight >= 1, weight
+        g.ready += weight
         g.waiting.append(rank)
         if g.ready < g.size:
             return WriteResult(complete=False)
+        assert g.ready == g.size, \
+            f"group {group_id}: class weights overshoot the barrier " \
+            f"({g.ready} > {g.size})"
 
         # barrier reached: (1) update topo_id (2) dispatch (3) await ACKs
         # (4) ACK ranks (5) clear counter
@@ -103,6 +119,12 @@ class Controller:
             g.ready = 0
             g.waiting = []
             return WriteResult(True, now, False, acked)
+        # rails already consistent with this barrier (dispatch succeeded or
+        # digit no-op), with their pre-write topo records: a LATER rail's
+        # persistent failure must demote these too (§4.2 — the whole job
+        # moves to the giant ring, rails never stay on divergent
+        # topologies), reverting records the ring superseded
+        handled: List[Tuple[RailOrchestrator, TopoId]] = []
         for o in self.orchestrators:
             if o.rail_id not in g.rails:
                 continue
@@ -114,8 +136,10 @@ class Controller:
                 ack = max(ack, self._apply_giant_ring(o, now))
                 reconfigured = True
                 continue
-            new_topo = self.topo[o.rail_id].with_ways(ways, g.digit)
-            if new_topo == self.topo[o.rail_id]:
+            prev = self.topo[o.rail_id]
+            new_topo = prev.with_ways(ways, g.digit)
+            if new_topo == prev:
+                handled.append((o, prev))
                 continue
             done = self._dispatch(o, new_topo, now, ocs_fail)
             if not self.fallback_giant_ring:
@@ -123,8 +147,13 @@ class Controller:
                 # requested topology — recording new_topo would make
                 # telemetry claim circuits the OCS never programmed
                 self.topo[o.rail_id] = new_topo
+                handled.append((o, prev))
             ack = max(ack, done)
             reconfigured = True
+        if self.fallback_giant_ring:
+            for o, prev in handled:
+                self.topo[o.rail_id] = prev
+                ack = max(ack, self._apply_giant_ring(o, now))
         acked = tuple(g.waiting)
         g.idx += 1
         g.ready = 0

@@ -295,6 +295,24 @@ def count_windows(ops: Iterable[CommOp]) -> int:
     return max(0, len(build_phase_table(list(ops))) - 1)
 
 
+def phase_index_of(ops: Iterable[CommOp],
+                   table: Optional[List[Phase]] = None) -> List[int]:
+    """uid -> phase-index array for ``ops`` (-1 for non-scale-out uids).
+
+    Array-backed (op uids are dense from 0), built in one pass and shared
+    by every phase-aware driver — both simulator engines index it instead
+    of each rebuilding a per-uid dict.
+    """
+    ops = list(ops)
+    if table is None:
+        table = build_phase_table(ops)
+    arr = [-1] * ((max(o.uid for o in ops) + 1) if ops else 0)
+    for pi, p in enumerate(table):
+        for uid in range(p.start_idx, p.end_idx + 1):
+            arr[uid] = pi
+    return arr
+
+
 def phase_digits(phase: Phase, digits: List[int], n_ways: int) -> List[int]:
     """Topo digits required by a phase, given the current digits."""
     nd = list(digits)

@@ -12,11 +12,25 @@ simulator (and any future scenario driver) programs against:
     plane.profile(ops)                       # §4.2 profiling iterations
     ev = plane.pre_comm(rank, op, now=t)     # Algorithm 1
     ev = plane.post_comm(rank, op, now=t)    # Algorithm 2
+    ev = plane.pre_comm_all(op, now=t)       # Algorithm 1, every rank
+    ev = plane.post_comm_all(op, now=t)      # Algorithm 2, every rank
     plane.telemetry()                        # barriers/dispatches/ports/...
 
 Every simulated number — reconfiguration counts, barrier counts, ports
 programmed, giant-ring fallback — is an EMERGENT property of these
 machines, never re-derived analytically (DESIGN.md §3).
+
+Rank-equivalence classes (DESIGN.md §8): the op stream is SPMD — ranks
+sharing a (way, group-role) coordinate execute byte-identical Action
+streams — so ``ControlPlane(job, collapse=True)`` instantiates ONE
+representative Shim per pipeline way and issues class-cardinality-weighted
+barrier writes instead of per-rank ones.  Telemetry is bit-identical to
+the uncollapsed plane (weighted sums over identical per-shim counters);
+Python-level dispatch drops from O(ops x ranks) to O(ops x ways).  The
+batched ``pre_comm_all``/``post_comm_all`` entry points drive one call per
+op on either plane flavour, and after the first (warmup) iteration they
+replay the recorded steady-state action schedule instead of re-walking the
+unchanged shim state machines.
 
 Placement model: the job's scale-out ranks are laid out way-major,
 ``rank = way * per_way + ((c * ep) + e) * fsdp + f`` for FSDP coordinate
@@ -46,11 +60,6 @@ class PlaneEvent:
     network: str = ""                 # selected data plane, if any
     waited: bool = False              # hit the topology lock (G1)
     write: Optional[WriteResult] = None   # completed/pending barrier state
-
-
-def _scale_out_dims(job: JobConfig) -> Dict[str, int]:
-    """Scale-out parallelism degrees, in placement (minor-to-major) order."""
-    return {"fsdp": job.fsdp, "cp": job.cp, "ep": job.ep}
 
 
 def build_placement(job: JobConfig, job_id: str = "job0") -> JobPlacement:
@@ -93,6 +102,10 @@ class ControlPlane:
                     ``PROVISIONING`` (speculative, Alg 2 / O2)
       ocs_fail      fault injector ``(attempt) -> bool``; persistent
                     failure triggers the §4.2 giant-ring fallback
+      collapse      rank-equivalence-class mode (DESIGN.md §8): one
+                    representative Shim per pipeline way, weighted
+                    barrier writes; telemetry identical, O(ways) instead
+                    of O(ranks) Python dispatch per op
     """
 
     def __init__(self, job: JobConfig, *, n_rails: int = 1,
@@ -101,7 +114,8 @@ class ControlPlane:
                  max_retries: int = 3,
                  ocs_fail: Optional[Callable[[int], bool]] = None,
                  job_id: str = "job0",
-                 listeners: Sequence[Callable] = ()):
+                 listeners: Sequence[Callable] = (),
+                 collapse: bool = False):
         assert n_rails >= 1, "a job spans at least one rail"
         self.job = job
         self.job_id = job_id
@@ -110,6 +124,7 @@ class ControlPlane:
         self.n_ways = job.pp
         self.ocs_fail = ocs_fail
         self.listeners = list(listeners)
+        self.collapse = collapse
 
         self.orchestrators: List[RailOrchestrator] = []
         initial = TopoId.uniform(self.n_ways, 1)
@@ -122,12 +137,38 @@ class ControlPlane:
         self.controller = Controller(job_id, self.n_ways,
                                      self.orchestrators, timeout=timeout,
                                      max_retries=max_retries)
-        self.shims = [Shim(rank, mode=mode) for rank in range(self.n_ranks)]
-        # per-(group, rank) write counters: rank r's k-th write to group g
-        # carries barrier index k — every shim replays the same SPMD op
+        # rank-equivalence classes: (representative rank, cardinality).
+        # Derivation rule (DESIGN.md §8): ranks sharing a pipeline way
+        # occupy the same group-role in every CTR group the SPMD stream
+        # writes, so their Action streams are byte-identical and one
+        # representative per way suffices.  The uncollapsed plane is the
+        # degenerate partition — one singleton class per rank.
+        per_way = job.fsdp * job.cp * job.ep
+        if collapse:
+            self.classes: List[Tuple[int, int]] = [
+                (w * per_way, per_way) for w in range(self.n_ways)]
+        else:
+            self.classes = [(r, 1) for r in range(self.n_ranks)]
+        self.shims = [Shim(rep, mode=mode) for rep, _ in self.classes]
+        # per-(group, class) write counters: class c's k-th write to group
+        # g carries barrier index k — every shim replays the same SPMD op
         # stream, so the counters stay aligned with the controller's
-        # per-group in-flight index across iterations.
+        # per-group in-flight index across iterations.  Uncollapsed,
+        # class index == rank.
         self._wseq: Dict[str, List[int]] = {}
+        # batched-entry-point accounting (call_stats) + schedule cache
+        self.n_plane_calls = 0        # pre/post entry-point invocations
+        self.n_class_execs = 0        # per-class action executions
+        self.n_shim_walks = 0         # live state-machine walks (no replay)
+        self.replayed_iterations = 0
+        # schedule entries: (pre|post, op uid, per-class action tuples,
+        # per-class post-call topology_busy flags)
+        self._cache_enabled = True
+        self._recording: Optional[List[Tuple[str, int, tuple,
+                                             Tuple[bool, ...]]]] = None
+        self._sched: Optional[List[Tuple[str, int, tuple,
+                                         Tuple[bool, ...]]]] = None
+        self._cursor = 0
 
     # -- profiling (§4.2) ----------------------------------------------------
     def profile(self, ops: Sequence[CommOp]) -> None:
@@ -150,23 +191,138 @@ class ControlPlane:
             digit = PP_DIGIT if dim == "pp" else SYM_DIGITS.get(dim, 1)
             self.controller.register_group(GroupState(
                 dim, dim, digit, size=self.n_ranks, rails=rails, ways=ways))
-            self._wseq.setdefault(dim, [0] * self.n_ranks)
+            self._wseq.setdefault(dim, [0] * len(self.classes))
+        self._recording = None
+        self._sched = None
+        self._cursor = 0
 
     def start_iteration(self) -> None:
-        """Rewind the shims' phase-table walk for the next iteration."""
+        """Rewind the shims' phase-table walk for the next iteration.
+
+        Iteration boundaries also drive the schedule cache: the first
+        iteration after ``profile`` records the per-op action schedule the
+        batched entry points produce; from the second on, the cycle is
+        replayed without re-walking the shim state machines (the stream is
+        SPMD-cyclic, so it is identical every iteration — asserted during
+        replay)."""
+        promote = False
+        if self._cache_enabled and self._recording:
+            # only a COMPLETE warmup iteration may become the replay
+            # schedule: a full walk leaves every shim past its table with
+            # the topology lock released.  A mid-phase bail (judged BEFORE
+            # restart() rewinds the walk) must fall back to live walking —
+            # a consistently-truncated drive would otherwise replay a
+            # stream whose wait/lock pattern differs from a live walk's.
+            promote = all(s.comm_stage == len(s.phase_table)
+                          and not s.topology_busy for s in self.shims)
+            if not promote:
+                self._cache_enabled = False
+                self._recording = None
         for s in self.shims:
             s.restart()
+        if not self._cache_enabled:
+            return
+        if self._sched is not None and self._cursor != 0:
+            # a partially-replayed iteration breaks the cyclic-stream
+            # premise (the driver bailed mid-schedule): drop the cache and
+            # walk live from here — the shims just restarted, so a live
+            # walk from the iteration top is exactly right
+            self._cache_enabled = False
+            self._sched = None
+            self._recording = None
+            return
+        if promote:
+            self._sched = self._recording
+            self._recording = None
+        elif self._sched is None:
+            self._recording = []
+        self._cursor = 0
 
     # -- event API (Algorithms 1-2) -----------------------------------------
     def pre_comm(self, rank: int, op: CommOp, now: float = 0.0) -> PlaneEvent:
-        return self._exec(rank, op, self.shims[rank].pre_comm(op), now)
+        self._per_rank_mode()
+        return self._exec(rank, rank, op, self.shims[rank].pre_comm(op), now)
 
     def post_comm(self, rank: int, op: CommOp,
                   now: float = 0.0) -> PlaneEvent:
-        return self._exec(rank, op, self.shims[rank].post_comm(op), now)
+        self._per_rank_mode()
+        return self._exec(rank, rank, op, self.shims[rank].post_comm(op),
+                          now)
 
-    def _exec(self, rank: int, op: CommOp, acts: List[Action],
-              now: float) -> PlaneEvent:
+    def _per_rank_mode(self):
+        """Per-rank calls interleave arbitrarily with iteration boundaries
+        (tests drive partial iterations, fault probes break early), so the
+        cyclic-schedule cache cannot assume one *_all stream — disable it
+        for this plane's lifetime."""
+        assert not self.collapse, \
+            "per-rank event API on a collapsed plane; use pre_comm_all/" \
+            "post_comm_all or construct ControlPlane(collapse=False)"
+        # mid-replay the shim state machines are NOT walked (absorb only),
+        # so a per-rank call here would resume them from stale state and
+        # silently diverge from the per-rank ground truth — reject loudly.
+        # At a cursor-0 boundary the shims sit in their restarted
+        # (iteration-top) state and live walking is consistent.
+        assert self._sched is None or self._cursor == 0, \
+            "per-rank event API mid-replay; finish the batched iteration " \
+            "or call start_iteration() first"
+        self.n_plane_calls += 1
+        self.n_shim_walks += 1
+        self.n_class_execs += 1
+        self._cache_enabled = False
+        self._recording = None
+        self._sched = None
+
+    # -- batched event API: one call per op for the WHOLE plane -------------
+    def pre_comm_all(self, op: CommOp, now: float = 0.0) -> PlaneEvent:
+        """Algorithm 1 on every rank (one representative per class).
+
+        Returns the completing rank's PlaneEvent when a barrier completed
+        during this op, else the last class's event."""
+        return self._all("pre", op, now)
+
+    def post_comm_all(self, op: CommOp, now: float = 0.0) -> PlaneEvent:
+        """Algorithm 2 on every rank (one representative per class)."""
+        return self._all("post", op, now)
+
+    def _all(self, kind: str, op: CommOp, now: float) -> PlaneEvent:
+        self.n_plane_calls += 1
+        if self._sched is not None:
+            k, uid, acts_per_class, busy_per_class = self._sched[self._cursor]
+            assert k == kind and uid == op.uid, \
+                f"replay stream diverged: cached ({k}, {uid}), " \
+                f"got ({kind}, {op.uid})"
+            self._cursor += 1
+            if self._cursor == len(self._sched):
+                self._cursor = 0
+                self.replayed_iterations += 1
+            for ci, acts in enumerate(acts_per_class):
+                self.shims[ci].absorb(acts)
+                # keep the topology-lock flag live-walk-exact too, so the
+                # shims are in the true mid-iteration state even if the
+                # driver bails and the cache is dropped (the lock is the
+                # one piece of walk state restart() preserves)
+                self.shims[ci].topology_busy = busy_per_class[ci]
+        else:
+            if kind == "pre":
+                acts_per_class = tuple(s.pre_comm(op) for s in self.shims)
+            else:
+                acts_per_class = tuple(s.post_comm(op) for s in self.shims)
+            self.n_shim_walks += len(self.shims)
+            if self._recording is not None:
+                self._recording.append(
+                    (kind, op.uid, acts_per_class,
+                     tuple(s.topology_busy for s in self.shims)))
+        self.n_class_execs += len(self.classes)
+        out: Optional[PlaneEvent] = None
+        for ci, ((rep, weight), acts) in enumerate(
+                zip(self.classes, acts_per_class)):
+            ev = self._exec(ci, rep, op, acts, now, weight)
+            if out is None or out.write is None or not out.write.complete:
+                out = ev           # completing event wins, else the last
+        return out
+
+    def _exec(self, ci: int, rank: int, op: CommOp, acts: Sequence[Action],
+              now: float, weight: int = 1) -> PlaneEvent:
         network = ""
         waited = False
         write: Optional[WriteResult] = None
@@ -176,11 +332,11 @@ class ControlPlane:
             elif a.kind == "wait_topology":
                 waited = True
             elif a.kind == "topo_write":
-                seq = self._wseq[a.group_id][rank]
-                self._wseq[a.group_id][rank] = seq + 1
+                seq = self._wseq[a.group_id][ci]
+                self._wseq[a.group_id][ci] = seq + 1
                 write = self.controller.topo_write(
                     rank, a.group_id, seq, asym_way=a.asym_way, now=now,
-                    ocs_fail=self.ocs_fail, ways=a.ways)
+                    ocs_fail=self.ocs_fail, ways=a.ways, weight=weight)
                 if write.complete:
                     for fn in self.listeners:
                         fn(self, a.group_id, write, now)
@@ -193,13 +349,22 @@ class ControlPlane:
 
     def telemetry(self) -> Dict[str, object]:
         """Aggregate counters from every component — the simulator's ONLY
-        source for reconfig/overhead accounting."""
+        source for reconfig/overhead accounting.
+
+        Shim counters are class-cardinality-weighted sums: every rank of a
+        class would have produced the representative's exact counter, so
+        the dict is bit-identical between collapsed and uncollapsed planes
+        (tested in tests/test_plane_collapse.py).  Call-volume accounting
+        (which DOES differ — that is the point of collapsing) lives in
+        ``call_stats`` instead."""
         c = self.controller
         return {
             "n_barriers": c.n_barriers,
             "n_dispatches": c.n_dispatches,
-            "n_topo_writes": sum(s.n_topo_writes for s in self.shims),
-            "n_waits": sum(s.n_waits for s in self.shims),
+            "n_topo_writes": sum(w * s.n_topo_writes for s, (_, w)
+                                 in zip(self.shims, self.classes)),
+            "n_waits": sum(w * s.n_waits for s, (_, w)
+                           in zip(self.shims, self.classes)),
             "n_reconfig_events": sum(o.n_reconfig_events
                                      for o in self.orchestrators),
             "n_program_calls": sum(o.ocs.n_program_calls
@@ -212,4 +377,18 @@ class ControlPlane:
             "failure_log": list(c.failure_log),
             "topo": {o.rail_id: c.topo[o.rail_id].digits
                      for o in self.orchestrators},
+        }
+
+    def call_stats(self) -> Dict[str, int]:
+        """Python-dispatch volume of this plane — the quantity the
+        equivalence-class collapse reduces (perf tracking; NOT part of
+        ``telemetry()``, which must stay collapse-invariant)."""
+        return {
+            "n_ranks": self.n_ranks,
+            "n_classes": len(self.classes),
+            "collapsed": int(self.collapse),
+            "n_plane_calls": self.n_plane_calls,
+            "n_class_execs": self.n_class_execs,
+            "n_shim_walks": self.n_shim_walks,
+            "replayed_iterations": self.replayed_iterations,
         }

@@ -107,6 +107,21 @@ class Shim:
         self.comm_stage = 0
         self.idx = 0
 
+    def absorb(self, acts: Sequence[Action]) -> None:
+        """Account a replayed action stream without re-walking the state
+        machine.
+
+        Steady-state iterations are cyclic: the action sequence a shim
+        emits is identical every iteration (``restart()`` resets the walk
+        to the same state), so the plane's schedule cache replays the
+        recorded actions and calls ``absorb`` to keep the telemetry
+        counters exactly what a live walk would have produced."""
+        for a in acts:
+            if a.kind == "topo_write":
+                self.n_topo_writes += 1
+            elif a.kind == "wait_topology":
+                self.n_waits += 1
+
     # -- Algorithm 1: PRE_COMM ----------------------------------------------
     def pre_comm(self, op: CommOp) -> List[Action]:
         acts: List[Action] = []

@@ -168,6 +168,12 @@ class PlaneBackendBridge:
         self.backend = ReconfigurableBackend(cfg, {})
         self.link_gbps = link_gbps if link_gbps is not None else cfg.link_gbps
         self.n_applied = 0
+        # every applied dispatch, in order: (group_id, topo_id, circuit
+        # pairs, time).  The rank-equivalence-class plane must produce THE
+        # SAME log as the uncollapsed plane (tests/test_plane_collapse.py)
+        # — the bridge is the observability point for that contract.
+        self.dispatch_log: List[Tuple[str, int, Tuple[Tuple[int, int], ...],
+                                      float]] = []
 
     GIANT_RING_ID = -1   # fallback circuits match no TopoId encoding
 
@@ -177,9 +183,10 @@ class PlaneBackendBridge:
         rail = plane.orchestrators[0]
         tid = (self.GIANT_RING_ID if plane.fallback_giant_ring
                else plane.controller.topo[rail.rail_id].encode())
-        pairs = sorted(rail.ocs.circuits.items())
+        pairs = tuple(sorted(rail.ocs.circuits.items()))
         self.backend.register_candidate(
-            tid, pairs_matrix(self.backend.cfg.n_ranks, pairs,
+            tid, pairs_matrix(self.backend.cfg.n_ranks, list(pairs),
                               self.link_gbps))
         self.backend.reconfigure(tid, now)
         self.n_applied += 1
+        self.dispatch_log.append((group_id, tid, pairs, now))

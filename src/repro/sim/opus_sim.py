@@ -22,16 +22,23 @@ Modes
 
 Engines (opus / opus_prov only; native / oneshot have no control plane)
   event     DEFAULT.  Replays the timed workload through the REAL control
-            plane (``repro.core.plane.ControlPlane``): per-rank Shims emit
-            Action records, topo_writes run against the real Controller /
+            plane (``repro.core.plane.ControlPlane``): Shims emit Action
+            records, topo_writes run against the real Controller /
             RailOrchestrator / OCSDriver, and every reconfiguration count
             or exposure second is derived from their telemetry.  Two
             iterations are replayed — the first warms the topology into
             its cyclic steady state (the §4.2 profiling iterations), the
-            second is measured.
+            second is measured.  The plane runs in rank-equivalence-class
+            mode (DESIGN.md §8): one representative Shim per pipeline
+            way, weighted barriers, one batched plane call per op — which
+            is what makes the 2048-GPU paper sweeps tractable.
+  event_full  The same event engine on an UNCOLLAPSED plane (one Shim and
+            one weighted-1 barrier write per rank).  O(ops x ranks)
+            Python dispatch; kept as the ground truth the collapsed plane
+            is tested bit-identical against (tests/test_plane_collapse).
   analytic  The original closed-form model (digit-diff reconfig counting,
             inlined exposure formulas), kept as a cross-check; the parity
-            contract with the event engine is tested in
+            contract with the event engines is tested in
             tests/test_plane.py and documented in DESIGN.md §4.
 
 Reconfiguration counting matches core.phases.count_reconfigs (digit-diff
@@ -41,6 +48,7 @@ digits change (paper Fig 11 right).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from functools import lru_cache
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core import phases as ph
@@ -134,8 +142,10 @@ def simulate(wl: TimedWorkload, params: SimParams, *,
     """Simulate one steady-state iteration.
 
     ``engine`` selects the opus-mode implementation: ``"event"`` (default)
-    drives the real control plane, ``"analytic"`` the closed-form
-    cross-check.  ``ocs_fail`` is the event engine's fault injector
+    drives the real control plane collapsed to rank-equivalence classes,
+    ``"event_full"`` the same plane uncollapsed (per-rank, O(ranks)
+    dispatch — the parity ground truth), ``"analytic"`` the closed-form
+    cross-check.  ``ocs_fail`` is the event engines' fault injector
     (``attempt -> bool``; persistent True triggers the §4.2 giant-ring
     fallback).
     """
@@ -147,9 +157,9 @@ def simulate(wl: TimedWorkload, params: SimParams, *,
     if eng == "analytic":
         assert ocs_fail is None, "fault injection needs the event engine"
         return _simulate_analytic(wl, params)
-    if eng != "event":
+    if eng not in ("event", "event_full"):
         raise ValueError(f"unknown engine {eng!r}")
-    return _simulate_event(wl, params, ocs_fail)
+    return _simulate_event(wl, params, ocs_fail, collapse=(eng == "event"))
 
 
 # ---------------------------------------------------------------------------
@@ -159,14 +169,25 @@ def simulate(wl: TimedWorkload, params: SimParams, *,
 
 def build_plane(job: ph.JobConfig, params: SimParams,
                 ocs_fail: Optional[Callable[[int], bool]] = None,
-                listeners=()) -> ControlPlane:
+                listeners=(), collapse: bool = False) -> ControlPlane:
     """The simulator's ControlPlane for (job, params) — exposed so callers
     (benchmarks, launchers, scenario drivers) wire the exact same plane."""
     mode = PROVISIONING if params.mode == "opus_prov" else DEFAULT
     return ControlPlane(job, n_rails=params.n_rails,
                         ocs_latency=params.ocs_latency,
                         nic_linkup=params.nic_linkup, mode=mode,
-                        ocs_fail=ocs_fail, listeners=listeners)
+                        ocs_fail=ocs_fail, listeners=listeners,
+                        collapse=collapse)
+
+
+@lru_cache(maxsize=64)
+def _phase_info(ops: Tuple[ph.CommOp, ...]):
+    """(phase table, uid -> phase-index array) for an op stream — the ONE
+    place both engines derive phase structure; cached so latency/bandwidth
+    sweeps over the same workload build it once (CommOp is frozen, so the
+    tuple is hashable and the entries immutable)."""
+    table = ph.build_phase_table(list(ops))
+    return table, ph.phase_index_of(ops, table)
 
 
 def _mgmt_op(op, t: float, t0: float, timeline: List[TimedOp]) -> float:
@@ -177,16 +198,13 @@ def _mgmt_op(op, t: float, t0: float, timeline: List[TimedOp]) -> float:
 
 
 def _simulate_event(wl: TimedWorkload, params: SimParams,
-                    ocs_fail: Optional[Callable[[int], bool]]) -> SimResult:
+                    ocs_fail: Optional[Callable[[int], bool]],
+                    collapse: bool = True) -> SimResult:
     job, gpu = wl.job, wl.gpu
-    plane = build_plane(job, params, ocs_fail)
+    plane = build_plane(job, params, ocs_fail, collapse=collapse)
     plane.profile(wl.ops)
     ctrl_sync, ctrl_async = params.resolved(job.n_gpus)
-    table = ph.build_phase_table(wl.ops)
-    phase_of: Dict[int, int] = {}
-    for pi, p in enumerate(table):
-        for uid in range(p.start_idx, p.end_idx + 1):
-            phase_of[uid] = pi
+    _, phase_of = _phase_info(tuple(wl.ops))
     dilation = _giant_ring_dilation(job)  # fault fallback bw factors
 
     t = 0.0
@@ -224,12 +242,11 @@ def _simulate_event(wl: TimedWorkload, params: SimParams,
                 t = max(t, pending_ready)
                 pending_ready = None
 
-            # Algorithm 1 on every rank; the barrier completes at the last
-            write = None
-            for r in range(plane.n_ranks):
-                ev = plane.pre_comm(r, op, now=t)
-                if ev.write is not None and ev.write.complete:
-                    write = ev.write
+            # Algorithm 1 on every rank (one batched plane call; the
+            # barrier completes at the last class write)
+            ev = plane.pre_comm_all(op, now=t)
+            write = ev.write if (ev.write is not None
+                                 and ev.write.complete) else None
             if write is not None:
                 n_writes += 1
                 if write.reconfigured:
@@ -257,11 +274,9 @@ def _simulate_event(wl: TimedWorkload, params: SimParams,
 
             # Algorithm 2 on every rank (provisioning writes ride here,
             # dispatched after the async control residue)
-            write = None
-            for r in range(plane.n_ranks):
-                ev = plane.post_comm(r, op, now=t + ctrl_async)
-                if ev.write is not None and ev.write.complete:
-                    write = ev.write
+            ev = plane.post_comm_all(op, now=t + ctrl_async)
+            write = ev.write if (ev.write is not None
+                                 and ev.write.complete) else None
             if write is not None:
                 n_writes += 1
                 if write.reconfigured:
@@ -278,8 +293,10 @@ def _simulate_event(wl: TimedWorkload, params: SimParams,
     tel["measured"] = {k: tel[k] - tel0[k] for k in tel
                        if isinstance(tel[k], int)
                        and not isinstance(tel[k], bool)}
+    tel["calls"] = plane.call_stats()   # perf tracking (BENCH_opus_sim)
     return SimResult(step_time, n_reconfigs, n_writes, exposed_r, exposed_c,
-                     timeline, engine="event", telemetry=tel)
+                     timeline, engine="event" if collapse else "event_full",
+                     telemetry=tel)
 
 
 # ---------------------------------------------------------------------------
@@ -290,11 +307,7 @@ def _simulate_event(wl: TimedWorkload, params: SimParams,
 def _simulate_analytic(wl: TimedWorkload, params: SimParams) -> SimResult:
     job, gpu = wl.job, wl.gpu
     n_ways = job.pp
-    table = ph.build_phase_table(wl.ops)
-    phase_of: Dict[int, int] = {}
-    for pi, p in enumerate(table):
-        for uid in range(p.start_idx, p.end_idx + 1):
-            phase_of[uid] = pi
+    table, phase_of = _phase_info(tuple(wl.ops))
 
     shares = _static_split(job) if params.mode == "oneshot" else {}
     reconf_total = params.ocs_latency + params.nic_linkup
@@ -379,12 +392,21 @@ def _simulate_analytic(wl: TimedWorkload, params: SimParams) -> SimResult:
                      timeline, engine="analytic")
 
 
+# modes whose step time does not depend on the OCS reconfiguration
+# latency: they are simulated ONCE per sweep and replicated across points
+LATENCY_INVARIANT_MODES = ("native", "oneshot")
+
+
 def sweep_latency(wl: TimedWorkload, latencies: List[float],
                   modes: Tuple[str, ...] = ("native", "opus", "opus_prov"),
                   engine: Optional[str] = None,
                   **kw) -> Dict[str, List[Tuple[float, float]]]:
     out: Dict[str, List[Tuple[float, float]]] = {m: [] for m in modes}
     for m in modes:
+        if m in LATENCY_INVARIANT_MODES:
+            r = simulate(wl, SimParams(mode=m, **kw), engine=engine)
+            out[m] = [(lat, r.step_time) for lat in latencies]
+            continue
         for lat in latencies:
             r = simulate(wl, SimParams(mode=m, ocs_latency=lat, **kw),
                          engine=engine)
