@@ -1,0 +1,170 @@
+"""CI perf-regression gate over the BENCH_*.json records.
+
+    python benchmarks/check_perf.py \
+        --pair benchmarks/baselines/BENCH_opus_sim.json BENCH_opus_sim.json \
+        --pair benchmarks/baselines/BENCH_opus_cluster.json BENCH_opus_cluster.json
+
+Compares a freshly-produced record against its committed baseline and
+exits non-zero on regression.  Rules:
+
+* ``wall_s`` leaves — fail when ``current > baseline * ratio + slack``
+  (default ratio 1.5x, slack 2 s).  The slack absorbs cross-machine
+  constant factors on sub-second benches; the regressions this guards —
+  losing the schedule-replay cache, falling back to O(ranks) per-rank
+  dispatch — are orders of magnitude, far beyond any slack.
+* int leaves (bools excluded) — EXACT match.  Every counter the
+  simulator emits (barriers, dispatches, ports programmed, plane calls,
+  queueing events) is deterministic by construction, so any drift is a
+  behaviour change that must be reviewed by regenerating the baseline.
+* float leaves — relative tolerance 1e-6 (model outputs are IEEE-
+  deterministic; the tolerance only guards JSON repr round-trips).
+* structure — missing or unexpected keys are errors.
+
+``--summary-md`` additionally appends a human headline table to the
+given file (CI points it at ``$GITHUB_STEP_SUMMARY``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List
+
+WALL_RATIO = 1.5
+WALL_SLACK = 2.0
+FLOAT_RTOL = 1e-6
+
+
+def compare(current, baseline, *, wall_ratio: float = WALL_RATIO,
+            wall_slack: float = WALL_SLACK, path: str = "$") -> List[str]:
+    """All regressions of ``current`` against ``baseline`` (empty = pass)."""
+    errs: List[str] = []
+    if isinstance(baseline, dict):
+        if not isinstance(current, dict):
+            return [f"{path}: expected object, got {type(current).__name__}"]
+        for k in baseline:
+            if k not in current:
+                errs.append(f"{path}.{k}: missing from current record")
+            else:
+                errs.extend(compare(current[k], baseline[k],
+                                    wall_ratio=wall_ratio,
+                                    wall_slack=wall_slack,
+                                    path=f"{path}.{k}"))
+        errs.extend(f"{path}.{k}: unexpected new key"
+                    for k in current if k not in baseline)
+        return errs
+    if isinstance(baseline, list):
+        if not isinstance(current, list):
+            return [f"{path}: expected array, got {type(current).__name__}"]
+        if len(current) != len(baseline):
+            return [f"{path}: {len(baseline)} entries in baseline, "
+                    f"{len(current)} in current"]
+        for i, (c, b) in enumerate(zip(current, baseline)):
+            errs.extend(compare(c, b, wall_ratio=wall_ratio,
+                                wall_slack=wall_slack, path=f"{path}[{i}]"))
+        return errs
+    if isinstance(baseline, bool) or isinstance(current, bool):
+        if current != baseline:
+            errs.append(f"{path}: {baseline} -> {current}")
+        return errs
+    if path.endswith(".wall_s"):
+        limit = baseline * wall_ratio + wall_slack
+        if current > limit:
+            errs.append(f"{path}: wall-clock regression {baseline}s -> "
+                        f"{current}s (limit {limit:.3f}s = "
+                        f"{wall_ratio}x + {wall_slack}s)")
+        return errs
+    if isinstance(baseline, int) and isinstance(current, int):
+        if current != baseline:
+            errs.append(f"{path}: counter drift {baseline} -> {current} "
+                        "(deterministic counters must match exactly; "
+                        "regenerate the baseline if the change is intended)")
+        return errs
+    if isinstance(baseline, (int, float)) and isinstance(current,
+                                                         (int, float)):
+        denom = max(abs(baseline), 1e-12)
+        if abs(current - baseline) / denom > FLOAT_RTOL:
+            errs.append(f"{path}: {baseline} -> {current} "
+                        f"(rel diff > {FLOAT_RTOL})")
+        return errs
+    if current != baseline:
+        errs.append(f"{path}: {baseline!r} -> {current!r}")
+    return errs
+
+
+def summary_markdown(records: Dict[str, dict]) -> str:
+    """Headline numbers of the produced records, as GitHub-flavoured
+    markdown for the CI step summary."""
+    lines = ["## Perf records", ""]
+    for name, rec in records.items():
+        lines.append(f"### `{rec.get('bench', name)}`")
+        lines.append("")
+        if "points" in rec:
+            lines.append("| point | GPUs | peak util | frag (peak) | "
+                         "mean overhead | max queue delay | OCS queued |")
+            lines.append("|---|---:|---:|---:|---:|---:|---:|")
+            for p in rec["points"]:
+                s = p["summary"]
+                lines.append(
+                    f"| {p['label']} | {s['total_gpus']} "
+                    f"| {s['peak_utilization']:.2f} "
+                    f"| {s['peak_fragmentation']:.2f} "
+                    f"| {100 * s['mean_overhead_vs_native']:.2f}% "
+                    f"| {s['max_queueing_delay']:.2f}s "
+                    f"| {s['rails']['n_queued_programs']} |")
+            lines.append(f"\nwall: {rec['wall_s']}s")
+        else:
+            calls = rec.get("plane_calls", {})
+            lines.append(f"- wall: **{rec.get('wall_s')}s** at "
+                         f"{rec.get('n_gpus')} GPUs ({rec.get('engine')})")
+            if "overhead_vs_native" in rec:
+                lines.append(f"- overhead vs native: "
+                             f"{100 * rec['overhead_vs_native']:.2f}%")
+            if calls:
+                lines.append(f"- plane calls: {calls.get('n_plane_calls')} "
+                             f"(per-rank equivalent "
+                             f"{calls.get('per_rank_equiv_plane_calls')})")
+        lines.append("")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--pair", nargs=2, action="append", default=[],
+                    metavar=("BASELINE", "CURRENT"),
+                    help="baseline/current record pair (repeatable)")
+    ap.add_argument("--wall-ratio", type=float, default=WALL_RATIO)
+    ap.add_argument("--wall-slack", type=float, default=WALL_SLACK)
+    ap.add_argument("--summary-md", default=None,
+                    help="append a markdown headline table to this file "
+                         "(CI: $GITHUB_STEP_SUMMARY)")
+    args = ap.parse_args(argv)
+    if not args.pair:
+        ap.error("at least one --pair is required")
+
+    failures: List[str] = []
+    records: Dict[str, dict] = {}
+    for base_path, cur_path in args.pair:
+        baseline = json.loads(Path(base_path).read_text())
+        current = json.loads(Path(cur_path).read_text())
+        records[Path(cur_path).name] = current
+        for e in compare(current, baseline, wall_ratio=args.wall_ratio,
+                         wall_slack=args.wall_slack):
+            failures.append(f"{cur_path} (vs {base_path}): {e}")
+
+    if args.summary_md:
+        with open(args.summary_md, "a") as f:
+            f.write(summary_markdown(records) + "\n")
+
+    if failures:
+        print(f"PERF GATE: {len(failures)} regression(s)", file=sys.stderr)
+        for f_ in failures:
+            print(f"  {f_}", file=sys.stderr)
+        return 1
+    print(f"perf gate: {len(args.pair)} record(s) within baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,7 +19,7 @@ from typing import Dict
 
 from repro.configs.base import get_config
 from repro.core import phases as ph
-from repro.core.windows import fraction_over, volume_class, window_cdf
+from repro.core.windows import fraction_over, volume_class
 from repro.sim.costmodel import compare
 from repro.sim.opus_sim import SimParams, analytical_estimate, simulate
 from repro.sim.workload import build
@@ -38,7 +38,6 @@ def bench_windows() -> Dict:
     wl = build(JOB1, "a100")
     r = simulate(wl, SimParams(mode="native"))
     ws = r.windows()
-    cdf = window_cdf(ws)
     frac = fraction_over(ws, 1e-3)
     print("== Fig 4: inter-phase windows (Exp 1: Llama3-8B TP4/FSDP2/PP2) ==")
     for w in ws:
@@ -61,9 +60,6 @@ def bench_window_count() -> Dict:
         eq5 = ph.eq5_window_count(layers, m, pp)
         rows.append((pp, m, got, eq5))
         print(f"  PP={pp:3d} M={m:3d}: schedule={got:4d}  eq5={eq5:4d}")
-    job405 = ph.JobConfig(model=CFG8B.replace(n_layers=126), tp=8, fsdp=8,
-                          pp=16, global_batch=256, seq_len=8192,
-                          n_microbatch=32)
     eq5 = ph.eq5_window_count(126, 32, 16)
     print(f"  Llama3.1-405B-style (PP=16, M=32): eq5={eq5} windows/iter "
           f"(paper: ~127, ~6/s over a ~20 s iteration)")
@@ -194,7 +190,6 @@ def bench_sim_scale() -> Dict:
             if lat == 0.1:
                 out[f"{name}_100ms"] = p.step_time / nat
         # bandwidth sweep at 10ms
-        base_bw = wl.gpu.scale_out_gbps
         for bw in (100, 400, 1600):
             import dataclasses as dc
             gpu2 = dc.replace(wl.gpu, scale_out_gbps=float(bw))

@@ -1,7 +1,8 @@
 """Benchmark driver: every paper table/figure + the roofline report.
 
     PYTHONPATH=src python -m benchmarks.run [--skip-roofline]
-    PYTHONPATH=src python -m benchmarks.run --perf   # BENCH_opus_sim.json
+    PYTHONPATH=src python -m benchmarks.run --perf     # BENCH_opus_sim.json
+    PYTHONPATH=src python -m benchmarks.run --cluster  # BENCH_opus_cluster.json
 
 Prints each paper artifact's reproduction and a summary block, then the
 roofline table assembled from results/dryrun/*.json (produced by
@@ -10,8 +11,11 @@ recomputed here — benches must stay single-device-fast).
 
 ``--perf`` times one 2048-GPU steady-state run through the event engine
 (the rank-equivalence-class control plane) and writes the wall-clock plus
-plane-call counters to ``BENCH_opus_sim.json`` so the perf trajectory is
-tracked across PRs; CI runs it after the smoke subset.
+plane-call counters to ``BENCH_opus_sim.json``; ``--cluster`` sweeps
+4-32 concurrent jobs over shared per-rail OCS port space and writes
+``BENCH_opus_cluster.json``.  CI runs both after the smoke subset and
+gates them against benchmarks/baselines/ via benchmarks/check_perf.py
+(wall-clock ratio + exact counter match).
 """
 from __future__ import annotations
 
@@ -72,6 +76,16 @@ def perf_report(out_path: str = "BENCH_opus_sim.json") -> dict:
     r = simulate(wl, SimParams(mode="opus_prov", ocs_latency=0.01))
     wall = time.perf_counter() - t0
     calls = dict(r.telemetry["calls"])
+    if calls["replayed_iterations"] < 1:
+        # the measured iteration was a live walk: the replay cache failed
+        # to promote, which is itself the perf regression this record
+        # exists to catch — recording the (slow) numbers as if they were
+        # the steady state would hide it, so fail loudly instead
+        print("ERROR: replay cache did not promote — measured iteration "
+              "fell back to a live shim walk "
+              f"(replayed_iterations={calls['replayed_iterations']})",
+              file=sys.stderr)
+        raise SystemExit(1)
     # the pre-collapse engine made one plane call per (rank, op, pre/post)
     calls["per_rank_equiv_plane_calls"] = \
         calls["n_plane_calls"] * calls["n_ranks"]
@@ -95,6 +109,53 @@ def perf_report(out_path: str = "BENCH_opus_sim.json") -> dict:
     return rec
 
 
+# (n_jobs, ranks_per_job, shared ports per rail, allocation policy):
+# capacity-rich 4-job point, then increasingly multiplexed mixes where
+# arrivals queue on port space and reconfigs contend on the shared OCS
+CLUSTER_SWEEP = (
+    (4, 64, 288, "contiguous"),
+    (8, 32, 96, "contiguous"),
+    (16, 16, 96, "fragmented"),
+    (32, 8, 64, "contiguous"),
+)
+
+
+def cluster_report(out_path: str = "BENCH_opus_cluster.json") -> dict:
+    """Multi-job shared-rail sweep (DESIGN.md §9): 4-32 concurrent jobs,
+    ~0.9k-3.6k total GPUs, every job on its own real collapsed control
+    plane over SHARED per-rail OCS port space.  Counters are
+    deterministic (fixed arrival trace) — the perf gate exact-matches
+    them; wall-clock tracks that the merged-timeline scheduler stays
+    event-engine fast."""
+    from repro.sim.cluster import (ClusterParams, catalog_jobs,
+                                   simulate_cluster)
+    points = []
+    t_all = time.perf_counter()
+    print("== cluster: concurrent jobs on shared rails ==")
+    for n_jobs, ranks, n_ports, policy in CLUSTER_SWEEP:
+        specs = catalog_jobs(n_jobs, ranks, mean_gap=2.0)
+        res = simulate_cluster(specs, ClusterParams(
+            n_ports=n_ports, policy=policy, ocs_latency=0.01))
+        s = res.summary()
+        points.append({
+            "label": f"{n_jobs}x{ranks}r_{n_ports}p_{policy}",
+            "n_jobs": n_jobs, "ranks_per_job": ranks,
+            "n_ports": n_ports, "policy": policy,
+            "summary": s,
+        })
+        print(f"  {n_jobs:3d} jobs x {ranks:3d} ranks on {n_ports} ports "
+              f"({policy}): {s['total_gpus']} GPUs, "
+              f"peak util {s['peak_utilization']:.2f}, "
+              f"mean overhead {100 * s['mean_overhead_vs_native']:.2f}%, "
+              f"max queue delay {s['max_queueing_delay']:.2f}s")
+    wall = time.perf_counter() - t_all
+    rec = {"bench": "opus_cluster_shared_rails",
+           "wall_s": round(wall, 4), "points": points}
+    Path(out_path).write_text(json.dumps(rec, indent=2) + "\n")
+    print(f"  wall={wall:.3f}s  -> {out_path}")
+    return rec
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip-roofline", action="store_true")
@@ -103,10 +164,16 @@ def main():
     ap.add_argument("--perf", action="store_true",
                     help="write BENCH_opus_sim.json (2048-GPU event-engine "
                          "wall-clock + plane-call counters) and exit")
+    ap.add_argument("--cluster", action="store_true",
+                    help="write BENCH_opus_cluster.json (multi-job shared-"
+                         "rail sweep: ports, queueing, contention) and exit")
     args = ap.parse_args()
 
     if args.perf:
         perf_report()
+        return 0
+    if args.cluster:
+        cluster_report()
         return 0
 
     headlines = {}

@@ -4,11 +4,19 @@ technologies and cluster sizes, and print the paper's end-to-end tradeoff
 
     PYTHONPATH=src python examples/simulate_cluster.py \
         --model llama_80b --gpus 512 --gpu h200 --tp 8 --pp 4
+
+Multi-job mode (DESIGN.md §9) runs N concurrent jobs from the configs/
+catalog over SHARED per-rail OCS port space — port allocation, queueing,
+and reconfiguration contention through the real control plane:
+
+    PYTHONPATH=src python examples/simulate_cluster.py \
+        --jobs 8 --ranks-per-job 32 --ports 96 --policy contiguous
 """
 import argparse
 
 from repro.configs.base import get_config
 from repro.core.phases import JobConfig, count_reconfigs
+from repro.sim.cluster import ClusterParams, catalog_jobs, simulate_cluster
 from repro.sim.costmodel import compare
 from repro.sim.opus_sim import SimParams, simulate
 from repro.sim.workload import GPUS, build
@@ -19,6 +27,43 @@ OCS_TECH = {
     "liquid-crystal 300x300": 0.1,
     "ideal (0 ms)": 0.0,
 }
+
+
+def run_cluster(args):
+    """--jobs N: concurrent tenants over shared per-rail port space."""
+    n_ports = args.ports or max(args.ranks_per_job,
+                                (args.jobs // 2) * args.ranks_per_job)
+    specs = catalog_jobs(args.jobs, args.ranks_per_job,
+                         mean_gap=args.mean_gap)
+    res = simulate_cluster(specs, ClusterParams(
+        n_ports=n_ports, n_rails=args.rails, policy=args.policy,
+        ocs_latency=0.01, gpu=args.gpu))
+    s = res.summary()
+    print(f"{args.jobs} jobs x {args.ranks_per_job} ranks on {n_ports} "
+          f"shared ports/rail ({args.policy}), {s['total_gpus']} GPUs:")
+    print(f"  {'job':8s} {'model':22s} {'gpus':>5s} {'queued':>8s} "
+          f"{'step':>8s} {'overhead':>9s} {'reconfigs':>9s}")
+    for row in res.job_rows():
+        if row["status"] != "done":
+            print(f"  {row['job']:8s} {row['model']:22s} "
+                  f"{row['n_gpus']:5d} {row['status']:>8s}")
+            continue
+        print(f"  {row['job']:8s} {row['model']:22s} {row['n_gpus']:5d} "
+              f"{row['queueing_delay']:7.2f}s {row['step_time']:7.3f}s "
+              f"{100 * row['overhead_vs_native']:8.2f}% "
+              f"{row['n_reconfigs']:9d}")
+    print(f"  cluster: peak util {s['peak_utilization']:.2f}, "
+          f"peak fragmentation {s['peak_fragmentation']:.2f}, "
+          f"mean queueing delay {s['mean_queueing_delay']:.2f}s")
+    r = s["rails"]
+    print(f"  shared OCS: {r['n_reconfig_events']} reconfig events, "
+          f"{r['n_queued_programs']} queued behind an in-flight reconfig "
+          f"({r['queue_wait_s']:.3f}s switch-busy wait)")
+    if "network_bill" in s:
+        b = s["network_bill"]
+        print(f"  network bill at peak ({s['peak_concurrent_gpus']} GPUs): "
+              f"{b['cost_ratio']:.2f}x cost, {b['power_ratio']:.1f}x power "
+              f"in favour of photonic rails")
 
 
 def main():
@@ -37,9 +82,23 @@ def main():
                     choices=["event", "event_full", "analytic"],
                     help="event = the real control plane collapsed to rank-"
                          "equivalence classes; event_full = per-rank")
+    ap.add_argument("--jobs", type=int, default=0,
+                    help="multi-job mode: N concurrent catalog jobs on "
+                         "shared rails (0 = single-job sweep)")
+    ap.add_argument("--ranks-per-job", type=int, default=32,
+                    help="scale-out ranks (= ports per rail) per tenant")
+    ap.add_argument("--ports", type=int, default=0,
+                    help="shared OCS ports per rail (default: fits half "
+                         "the tenants at once)")
+    ap.add_argument("--policy", default="contiguous",
+                    choices=["contiguous", "fragmented"])
+    ap.add_argument("--mean-gap", type=float, default=2.0,
+                    help="mean inter-arrival gap (simulated seconds)")
     args = ap.parse_args()
     if args.fault and args.engine == "analytic":
         ap.error("--fault needs the event engine (real control plane)")
+    if args.jobs:
+        return run_cluster(args)
 
     cfg = get_config(args.model)
     dp = args.gpus // (args.tp * args.pp)

@@ -12,9 +12,8 @@ import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-import jax
+import jax  # noqa: F401  (import after XLA_FLAGS is set)
 
-from repro.configs.base import get_config
 from repro.launch.train import main as train_main
 
 

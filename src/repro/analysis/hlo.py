@@ -77,12 +77,10 @@ def _first_group(line: str) -> Optional[List[int]]:
         perm = None
         if m.group(2):
             perm = [int(x) for x in m.group(2).split(",")]
-        gs = _GROUPS_ARR_RE.search(line)
         hdr = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
         if not hdr:
             return None
         n_groups, gsize = int(hdr.group(1)), int(hdr.group(2))
-        ids = list(range(math.prod(dims)))
         # iota over dims, transposed by perm, reshaped to [G, S]
         import numpy as np
         arr = np.arange(math.prod(dims)).reshape(dims)

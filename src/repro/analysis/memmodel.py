@@ -18,7 +18,6 @@ from __future__ import annotations
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import transformer as tf
-from repro.models.layers import padded_vocab
 
 
 def _param_bytes_local(cfg: ModelConfig, tp: int, fsdp: int) -> float:

@@ -12,8 +12,8 @@ the bottleneck attribution distinguishes scale-up from rail pressure.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, Optional
+from dataclasses import dataclass
+from typing import Dict
 
 PEAK_FLOPS = 197e12         # bf16 / chip
 HBM_BW = 819e9              # bytes/s / chip

@@ -13,8 +13,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.topo import PP_DIGIT, TopoId
 from repro.core.orchestrator import RailOrchestrator
+from repro.core.topo import PP_DIGIT, TopoId
 
 
 @dataclass
@@ -133,7 +133,7 @@ class Controller:
                 # demoted the whole job (§4.2): the remaining rails join
                 # the static giant ring instead of the requested topology,
                 # so every rail of the job stays consistent
-                ack = max(ack, self._apply_giant_ring(o, now))
+                ack = max(ack, o.apply_giant_ring(self.job_id, now))
                 reconfigured = True
                 continue
             prev = self.topo[o.rail_id]
@@ -153,7 +153,7 @@ class Controller:
         if self.fallback_giant_ring:
             for o, prev in handled:
                 self.topo[o.rail_id] = prev
-                ack = max(ack, self._apply_giant_ring(o, now))
+                ack = max(ack, o.apply_giant_ring(self.job_id, now))
         acked = tuple(g.waiting)
         g.idx += 1
         g.ready = 0
@@ -171,17 +171,10 @@ class Controller:
                 now += self.timeout
                 continue
             return o.apply(self.job_id, topo, now)
-        # persistent failure: fall back to the static giant ring
+        # persistent failure: fall back to the static giant ring — via the
+        # orchestrator, so the §9 port-ownership invariant and per-job
+        # accounting hold on the fault path too
         self.fallback_giant_ring = True
         self.failure_log.append(
             f"rail {o.rail_id}: persistent failure -> giant ring fallback")
-        return self._apply_giant_ring(o, now)
-
-    def _apply_giant_ring(self, o: RailOrchestrator, now: float) -> float:
-        """Static circuit connecting all ranks (reduced bandwidth)."""
-        st = o.jobs[self.job_id]
-        ports = sorted(st.placement.all_ports)
-        pairs = [(ports[i], ports[(i + 1) % len(ports)])
-                 for i in range(len(ports))]
-        o.ocs.program(sorted(st.placement.all_ports), pairs, now)
-        return o.ocs.busy_until
+        return o.apply_giant_ring(self.job_id, now)

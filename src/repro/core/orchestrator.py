@@ -5,15 +5,23 @@ commands through a vendor-neutral switch-driver interface.  Stores one
 sub-mapping per (job, way) — O(N_parallel * N_rank) total — and on a
 topo_id update reprograms only the affected ways' ports (digit-diff
 dispatch, Fig 8).  Multi-job composition: sub-mappings of other jobs are
-never disturbed (non-blocking OCS semantics, §7).
+never disturbed (non-blocking OCS semantics, §7); the orchestrator
+enforces this as a hard port-ownership invariant — every programmed port
+must belong to the dispatching job (DESIGN.md §9) — and keeps per-job
+programming counters so a shared rail still yields per-job telemetry.
+
+``PortAllocator`` is the cluster-level port-space manager: concurrent
+jobs carve their NIC ports out of one shared per-rail OCS port space
+(every rank owns the same port index on every rail, paper Fig 1, so one
+allocator instance governs all rails of a cluster).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Tuple
 
 from repro.core.topo import (JobPlacement, SubMapping, TopoId, affected_ways,
-                             build_submapping)
+                             build_submapping, ring_pairs)
 
 
 class OCSDriver:
@@ -27,6 +35,14 @@ class OCSDriver:
         self.n_program_calls = 0
         self.n_ports_programmed = 0
         self.busy_until = 0.0
+        # reconfiguration serialization: programs that found the switch
+        # mid-reconfiguration and had to queue behind it.  The switch has
+        # no tenant concept, so this counts queueing behind ANY in-flight
+        # program — another job's (cluster contention) or this job's own
+        # back-to-back dispatches — a property of the switch, not of who
+        # asked.
+        self.n_queued_programs = 0
+        self.queue_wait_s = 0.0
 
     def program(self, disconnect: List[int], connect: List[Tuple[int, int]],
                 now: float = 0.0) -> float:
@@ -46,6 +62,10 @@ class OCSDriver:
             self.circuits[a] = b
         self.n_program_calls += 1
         self.n_ports_programmed += len(disconnect) + len(connect)
+        wait = max(0.0, self.busy_until - now)
+        if wait > 0.0:
+            self.n_queued_programs += 1
+            self.queue_wait_s += wait
         done = max(now, self.busy_until) + self.reconfig_latency
         self.busy_until = done
         return done
@@ -59,6 +79,11 @@ class JobTopoState:
     placement: JobPlacement
     topo: TopoId
     submaps: Dict[int, SubMapping] = field(default_factory=dict)
+    # per-job programming counters: on a shared rail the OCS-level totals
+    # mix tenants, so per-job telemetry reads these instead (DESIGN.md §9)
+    n_reconfig_events: int = 0
+    n_program_calls: int = 0
+    n_ports_programmed: int = 0
 
 
 class RailOrchestrator:
@@ -68,21 +93,47 @@ class RailOrchestrator:
         self.rail_id = rail_id
         self.ocs = ocs
         self.jobs: Dict[str, JobTopoState] = {}
+        self.port_owner: Dict[int, str] = {}     # port -> job_id
         self.n_reconfig_events = 0
 
+    # -- the §9 isolation invariant -----------------------------------------
+    def _assert_owned(self, job_id: str, ports: Iterable[int]) -> None:
+        """No program on behalf of ``job_id`` may ever name a port that
+        belongs to another tenant — asserted on EVERY dispatch path
+        (reconfigs, registration, deregistration, giant-ring fallback)."""
+        foreign = sorted(p for p in ports
+                         if self.port_owner.get(p) != job_id)
+        assert not foreign, \
+            f"job {job_id!r} would program foreign/unowned ports {foreign}"
+
+    def _programmed(self, st: JobTopoState, n_ports: int) -> None:
+        st.n_program_calls += 1
+        st.n_ports_programmed += n_ports
+
     # -- job management ----------------------------------------------------
-    def register_job(self, placement: JobPlacement, initial: TopoId) -> float:
+    def register_job(self, placement: JobPlacement, initial: TopoId,
+                     now: float = 0.0) -> float:
+        taken = sorted(p for p in placement.all_ports
+                       if p in self.port_owner)
+        assert not taken, \
+            f"job {placement.job_id!r} claims already-owned ports {taken}"
         st = JobTopoState(placement, initial)
         for w in range(initial.n_ways):
             st.submaps[w] = build_submapping(placement, initial, w)
         self.jobs[placement.job_id] = st
+        for p in placement.all_ports:
+            self.port_owner[p] = placement.job_id
         pairs = [p for sm in st.submaps.values() for p in sm.pairs]
-        return self.ocs.program([], pairs)
+        self._programmed(st, len(pairs))
+        return self.ocs.program([], pairs, now)
 
-    def deregister_job(self, job_id: str):
+    def deregister_job(self, job_id: str, now: float = 0.0):
         st = self.jobs.pop(job_id)
         ports = sorted(st.placement.all_ports)
-        self.ocs.program(ports, [])
+        self._assert_owned(job_id, ports)
+        for p in ports:
+            del self.port_owner[p]
+        self.ocs.program(ports, [], now)
 
     # -- reconfiguration dispatch (paper Fig 8) -----------------------------
     def apply(self, job_id: str, new_topo: TopoId, now: float = 0.0) -> float:
@@ -122,12 +173,157 @@ class RailOrchestrator:
         live = {a for w, sm in st.submaps.items() if w not in ways
                 for a, _ in sm.pairs}
         assert not (set(dst_of) & live), sorted(set(dst_of) & live)
+        self._assert_owned(job_id, disco | {p for ab in conn for p in ab})
         st.topo = new_topo
         self.n_reconfig_events += 1
+        st.n_reconfig_events += 1
+        self._programmed(st, len(disco) + len(conn))
         done = self.ocs.program(sorted(disco), conn, now)
         return done
 
-    def storage_entries(self) -> int:
-        """Sub-mapping storage actually held (for the O() claims test)."""
-        return sum(len(sm.pairs) + 1 for st in self.jobs.values()
+    def apply_giant_ring(self, job_id: str, now: float = 0.0) -> float:
+        """§4.2 fallback: one static cycle over ALL of the job's ports
+        (reduced bandwidth).  Routed through the orchestrator — not the
+        raw OCS — so the isolation invariant and per-job accounting hold
+        on the fault path too: the ring is built strictly from the job's
+        own ports and never touches another tenant's circuits."""
+        st = self.jobs[job_id]
+        ports = sorted(st.placement.all_ports)
+        self._assert_owned(job_id, ports)
+        pairs = list(ring_pairs(ports))
+        self.n_reconfig_events += 1
+        st.n_reconfig_events += 1
+        self._programmed(st, len(ports) + len(pairs))
+        self.ocs.program(ports, pairs, now)
+        return self.ocs.busy_until
+
+    def job_stats(self, job_id: str) -> Dict[str, int]:
+        """Per-job programming counters (shared-rail telemetry source)."""
+        st = self.jobs[job_id]
+        return {
+            "n_reconfig_events": st.n_reconfig_events,
+            "n_program_calls": st.n_program_calls,
+            "n_ports_programmed": st.n_ports_programmed,
+        }
+
+    def storage_entries(self, job_id: Optional[str] = None) -> int:
+        """Sub-mapping storage actually held (for the O() claims test);
+        restricted to one tenant when ``job_id`` is given."""
+        jobs = self.jobs.values() if job_id is None else [self.jobs[job_id]]
+        return sum(len(sm.pairs) + 1 for st in jobs
                    for sm in st.submaps.values())
+
+
+# ---------------------------------------------------------------------------
+# cluster port-space management (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+class PortAllocator:
+    """Shared per-rail OCS port space carved across concurrent jobs.
+
+    Rail fabrics give every scale-out rank the same port index on every
+    rail (paper Fig 1), so ONE allocator instance governs a whole
+    cluster's rails: a grant is a tuple of port indices valid on each of
+    them.  Two policies:
+
+      contiguous  first-fit contiguous range.  Rings stay physically
+                  local, but departures strand free ports between
+                  tenants — a later job can be rejected with enough
+                  total ports free (external fragmentation).
+      fragmented  first-fit over individual free ports.  Always admits
+                  when enough ports are free, at the price of scattered
+                  rings (an OCS crossbar is distance-free, §7, so this
+                  costs nothing in the model — the policy split exists
+                  to quantify exactly that trade).
+
+    Rejected requests are counted, never raised: admission control
+    (queue vs reject) is the cluster scheduler's decision.
+    """
+
+    POLICIES = ("contiguous", "fragmented")
+
+    def __init__(self, n_ports: int, policy: str = "contiguous"):
+        assert policy in self.POLICIES, policy
+        assert n_ports >= 1, n_ports
+        self.n_ports = n_ports
+        self.policy = policy
+        self.owner: Dict[int, str] = {}          # port -> job_id
+        self.grants: Dict[str, Tuple[int, ...]] = {}
+        self.n_allocations = 0
+        # failed allocate() attempts — NOT distinct jobs turned away: a
+        # queued job re-tried at every departure counts once per re-try
+        # (admission-queue pressure; ClusterSim's "rejected" job status
+        # separately tracks jobs that can never fit)
+        self.n_failed_allocs = 0
+
+    # -- allocation ---------------------------------------------------------
+    def allocate(self, job_id: str, n: int) -> Optional[Tuple[int, ...]]:
+        """Grant ``n`` ports to ``job_id`` or return None (no room under
+        the policy).  A job holds at most one grant."""
+        assert job_id not in self.grants, f"{job_id!r} already holds ports"
+        assert n >= 1, n
+        if self.policy == "contiguous":
+            grant = self._first_fit_run(n)
+        else:
+            free = [p for p in range(self.n_ports) if p not in self.owner]
+            grant = tuple(free[:n]) if len(free) >= n else None
+        if grant is None:
+            self.n_failed_allocs += 1
+            return None
+        for p in grant:
+            self.owner[p] = job_id
+        self.grants[job_id] = grant
+        self.n_allocations += 1
+        return grant
+
+    def release(self, job_id: str) -> Tuple[int, ...]:
+        grant = self.grants.pop(job_id)
+        for p in grant:
+            assert self.owner.pop(p) == job_id
+        return grant
+
+    def _first_fit_run(self, n: int) -> Optional[Tuple[int, ...]]:
+        for start, length in self.free_runs():
+            if length >= n:
+                return tuple(range(start, start + n))
+        return None
+
+    # -- telemetry ----------------------------------------------------------
+    def free_runs(self) -> List[Tuple[int, int]]:
+        """Maximal free (start, length) runs, ascending by start."""
+        runs: List[Tuple[int, int]] = []
+        start = None
+        for p in range(self.n_ports):
+            if p not in self.owner:
+                if start is None:
+                    start = p
+            elif start is not None:
+                runs.append((start, p - start))
+                start = None
+        if start is not None:
+            runs.append((start, self.n_ports - start))
+        return runs
+
+    def utilization(self) -> float:
+        return len(self.owner) / self.n_ports
+
+    def fragmentation(self) -> float:
+        """1 - largest_free_run / total_free: 0 when the free space is one
+        contiguous block (or the rail is full), approaching 1 as free
+        ports scatter into slivers no contiguous request can use."""
+        runs = self.free_runs()
+        free = sum(length for _, length in runs)
+        if free == 0:
+            return 0.0
+        return 1.0 - max(length for _, length in runs) / free
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "n_ports": self.n_ports,
+            "ports_in_use": len(self.owner),
+            "utilization": self.utilization(),
+            "fragmentation": self.fragmentation(),
+            "n_allocations": self.n_allocations,
+            "n_failed_allocs": self.n_failed_allocs,
+        }

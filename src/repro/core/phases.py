@@ -13,9 +13,8 @@ Symmetric dims get digit ids 1..9 in topo_id order (DP/FSDP=1, CP=2, EP=3).
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field, replace
-from typing import Dict, Iterable, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Iterable, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig
 

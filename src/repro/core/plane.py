@@ -40,14 +40,14 @@ NIC per rail, paper Fig 1).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.controller import Controller, GroupState, WriteResult
 from repro.core.orchestrator import OCSDriver, RailOrchestrator
 from repro.core.phases import SYM_DIGITS, CommOp, JobConfig
-from repro.core.shim import DEFAULT, PROVISIONING, Action, Shim
-from repro.core.topo import JobPlacement, PP_DIGIT, TopoId
+from repro.core.shim import DEFAULT, Action, Shim
+from repro.core.topo import PP_DIGIT, JobPlacement, TopoId
 
 
 @dataclass(frozen=True)
@@ -62,16 +62,27 @@ class PlaneEvent:
     write: Optional[WriteResult] = None   # completed/pending barrier state
 
 
-def build_placement(job: JobConfig, job_id: str = "job0") -> JobPlacement:
-    """One rail's port map for ``job`` (identical on every rail)."""
+def build_placement(job: JobConfig, job_id: str = "job0",
+                    ports: Optional[Sequence[int]] = None) -> JobPlacement:
+    """One rail's port map for ``job`` (identical on every rail).
+
+    ``ports`` maps the job's way-major rank index to a physical OCS port
+    — a ``PortAllocator`` grant in cluster mode (contiguous or scattered;
+    the ring structure only needs the index mapping).  Default: identity,
+    i.e. the job owns ports ``0..n_ranks-1``.
+    """
     fsdp, cp, ep = job.fsdp, job.cp, job.ep
     per_way = fsdp * cp * ep
+    n_ranks = job.pp * per_way
+    pmap = tuple(range(n_ranks)) if ports is None else tuple(ports)
+    assert len(pmap) == n_ranks, \
+        f"grant of {len(pmap)} ports for a {n_ranks}-rank job"
+    assert len(set(pmap)) == n_ranks, "duplicate ports in grant"
     ports_by_way = tuple(
-        tuple(range(w * per_way, (w + 1) * per_way))
-        for w in range(job.pp))
+        pmap[w * per_way:(w + 1) * per_way] for w in range(job.pp))
 
     def port(w: int, f: int, c: int, e: int) -> int:
-        return w * per_way + (c * ep + e) * fsdp + f
+        return pmap[w * per_way + (c * ep + e) * fsdp + f]
 
     sym: Dict[int, Dict[int, List[Tuple[int, ...]]]] = {}
     # digit 1: FSDP/DP rings (one per (cp, ep) coordinate and way)
@@ -106,6 +117,14 @@ class ControlPlane:
                     representative Shim per pipeline way, weighted
                     barrier writes; telemetry identical, O(ways) instead
                     of O(ranks) Python dispatch per op
+      orchestrators shared per-rail orchestrators (cluster mode, §9):
+                    the plane registers the job on THESE rails instead
+                    of creating private ones, so concurrent jobs'
+                    reconfigs contend on the same OCSes; ``ocs_latency``
+                    / ``nic_linkup`` are then properties of the shared
+                    rails, not this constructor
+      ports         PortAllocator grant mapping rank index -> physical
+                    OCS port (cluster mode; default identity)
     """
 
     def __init__(self, job: JobConfig, *, n_rails: int = 1,
@@ -115,25 +134,37 @@ class ControlPlane:
                  ocs_fail: Optional[Callable[[int], bool]] = None,
                  job_id: str = "job0",
                  listeners: Sequence[Callable] = (),
-                 collapse: bool = False):
-        assert n_rails >= 1, "a job spans at least one rail"
+                 collapse: bool = False,
+                 orchestrators: Optional[Sequence[RailOrchestrator]] = None,
+                 ports: Optional[Sequence[int]] = None,
+                 now: float = 0.0):
         self.job = job
         self.job_id = job_id
-        self.placement = build_placement(job, job_id)
+        self.placement = build_placement(job, job_id, ports=ports)
         self.n_ranks = job.pp * job.fsdp * job.cp * job.ep
         self.n_ways = job.pp
         self.ocs_fail = ocs_fail
         self.listeners = list(listeners)
         self.collapse = collapse
+        self.shared_rails = orchestrators is not None
 
-        self.orchestrators: List[RailOrchestrator] = []
         initial = TopoId.uniform(self.n_ways, 1)
-        for r in range(n_rails):
-            ocs = OCSDriver(n_ports=self.n_ranks,
-                            reconfig_latency=ocs_latency + nic_linkup)
-            orch = RailOrchestrator(r, ocs)
-            orch.register_job(self.placement, initial)
-            self.orchestrators.append(orch)
+        if orchestrators is not None:
+            self.orchestrators = list(orchestrators)
+            assert self.orchestrators, "a job spans at least one rail"
+            for orch in self.orchestrators:
+                orch.register_job(self.placement, initial, now)
+        else:
+            assert n_rails >= 1, "a job spans at least one rail"
+            assert ports is None, \
+                "port grants only make sense on shared rails"
+            self.orchestrators = []
+            for r in range(n_rails):
+                ocs = OCSDriver(n_ports=self.n_ranks,
+                                reconfig_latency=ocs_latency + nic_linkup)
+                orch = RailOrchestrator(r, ocs)
+                orch.register_job(self.placement, initial)
+                self.orchestrators.append(orch)
         self.controller = Controller(job_id, self.n_ways,
                                      self.orchestrators, timeout=timeout,
                                      max_retries=max_retries)
@@ -342,6 +373,14 @@ class ControlPlane:
                         fn(self, a.group_id, write, now)
         return PlaneEvent(rank, op.uid, tuple(acts), network, waited, write)
 
+    # -- cluster lifecycle ---------------------------------------------------
+    def release(self, now: float = 0.0) -> None:
+        """Departure (cluster mode): deregister this job from every rail,
+        freeing its ports and disconnecting its circuits.  The plane is
+        dead afterwards — snapshot ``telemetry()`` first."""
+        for o in self.orchestrators:
+            o.deregister_job(self.job_id, now)
+
     # -- observability -------------------------------------------------------
     @property
     def fallback_giant_ring(self) -> bool:
@@ -356,8 +395,11 @@ class ControlPlane:
         the dict is bit-identical between collapsed and uncollapsed planes
         (tested in tests/test_plane_collapse.py).  Call-volume accounting
         (which DOES differ — that is the point of collapsing) lives in
-        ``call_stats`` instead."""
+        ``call_stats`` instead.  Orchestrator/OCS quantities are the
+        per-job counters (identical to the switch totals on private
+        rails; the job's own slice of them on shared cluster rails)."""
         c = self.controller
+        js = [o.job_stats(self.job_id) for o in self.orchestrators]
         return {
             "n_barriers": c.n_barriers,
             "n_dispatches": c.n_dispatches,
@@ -365,13 +407,10 @@ class ControlPlane:
                                  in zip(self.shims, self.classes)),
             "n_waits": sum(w * s.n_waits for s, (_, w)
                            in zip(self.shims, self.classes)),
-            "n_reconfig_events": sum(o.n_reconfig_events
-                                     for o in self.orchestrators),
-            "n_program_calls": sum(o.ocs.n_program_calls
-                                   for o in self.orchestrators),
-            "n_ports_programmed": sum(o.ocs.n_ports_programmed
-                                      for o in self.orchestrators),
-            "storage_entries": sum(o.storage_entries()
+            "n_reconfig_events": sum(s["n_reconfig_events"] for s in js),
+            "n_program_calls": sum(s["n_program_calls"] for s in js),
+            "n_ports_programmed": sum(s["n_ports_programmed"] for s in js),
+            "storage_entries": sum(o.storage_entries(self.job_id)
                                    for o in self.orchestrators),
             "fallback_giant_ring": c.fallback_giant_ring,
             "failure_log": list(c.failure_log),

@@ -15,10 +15,10 @@ DESIGN.md §2 change (1).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
-from repro.core.phases import CommOp, Phase, build_phase_table
+from repro.core.phases import CommOp, build_phase_table
 
 DEFAULT = "default"
 PROVISIONING = "provisioning"

@@ -12,9 +12,9 @@ classes: <1MB sync ARs, PP sends, AG, RS).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Sequence, Tuple
+from typing import List, Sequence, Tuple
 
-from repro.core.phases import CommOp, Phase, build_phase_table
+from repro.core.phases import CommOp, build_phase_table
 
 
 @dataclass(frozen=True)

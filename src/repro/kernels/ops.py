@@ -11,12 +11,10 @@ to force the oracles even on TPU.
 """
 from __future__ import annotations
 
-import functools
 import os
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref
 

@@ -15,8 +15,7 @@ from repro import compat  # noqa: F401  (jax API aliases)
 from repro.configs.base import get_config
 from repro.launch.train import parse_mesh
 from repro.models import transformer as tf
-from repro.serve.step import (ServeSetup, init_serve_state, make_decode_step,
-                              make_prefill_step)
+from repro.serve.step import ServeSetup, init_serve_state, make_decode_step
 from repro.train.step import TrainSetup, init_sharded_state
 
 

@@ -15,12 +15,9 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding
 
 from repro import compat  # noqa: F401  (jax API aliases)
 from repro.configs.base import get_config
-from repro.launch.mesh import make_test_mesh
 from repro.models import transformer as tf
 from repro.train import checkpoint as ckpt
 from repro.train.data import DataConfig, synth_batch

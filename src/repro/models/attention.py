@@ -192,7 +192,6 @@ def decode_attention(p, x, pos, cache, cfg: ModelConfig, *,
     if ctx is not None:
         from repro.kernels import ref as kref
         b, _, h, dh = q.shape
-        kvh = k_cache.shape[2]
         vm = jnp.broadcast_to(valid[None, :], (b, capacity))
         acc, m, l = kref.decode_attention(q, k_cache, v_cache, vm,
                                           return_stats=True)

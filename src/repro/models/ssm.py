@@ -16,12 +16,12 @@ The perf-critical chunk kernel also exists as a Pallas kernel
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, SSMConfig
+from repro.configs.base import ModelConfig
 from repro.models.layers import dense_init, rms_norm, rms_norm_init
 
 

@@ -16,8 +16,6 @@ at tick t, stage s computes microbatch t-s while stage s+1 still waits.
 """
 from __future__ import annotations
 
-import math
-from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -19,8 +19,7 @@ import re
 from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 MODEL_AXIS = "model"
 

@@ -23,14 +23,12 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
-from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.base import ModelConfig
 from repro.core.fabric import Fabric
 from repro.models import transformer as tf
 from repro.parallel import sharding as sh
@@ -189,8 +187,6 @@ def _make_resident_decode_step(setup: ServeSetup, mesh, params_tpl):
     the 7.7 GB/token rail traffic.
     """
     cfg = setup.cfg
-    dp_axes = st.dp_axes_of(mesh)
-    csp = sh.make_csp(dp_axes, manual_rails=False)
 
     def step(params, state, token, pos, cross=None):
         return tf.decode_step(params, state, token, pos, cfg,

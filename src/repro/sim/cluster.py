@@ -1,0 +1,403 @@
+"""Multi-job photonic-rail cluster simulator (DESIGN.md §9).
+
+The single-job engine answers "what does reconfiguration cost one
+tenant?"; real rail fabrics multiplex MANY concurrent training jobs over
+shared rail switches, which makes port allocation and reconfiguration
+contention the central systems question (cf. ACOS's arrays of small
+OCSes, PCCL's per-collective circuit scheduling).  This module grows the
+event engine to that setting:
+
+* every job runs its own REAL ``ControlPlane(collapse=True)`` — shims,
+  controller, weighted barriers, schedule-replay cache, exactly the §8
+  machinery — registered on SHARED per-rail ``RailOrchestrator``s;
+* a :class:`~repro.core.orchestrator.PortAllocator` carves the per-rail
+  OCS port space across tenants (contiguous or fragmented policy), with
+  utilization/fragmentation telemetry sampled at every admission and
+  departure;
+* arrivals follow a deterministic Poisson-ish trace (:func:`exp_trace`);
+  a job that does not fit queues FIFO and is re-tried at departures
+  (head-of-line: admission order is preserved, never reordered);
+* all jobs advance on ONE merged event timeline: the scheduler always
+  steps the job with the smallest engine clock, so cross-job OCS
+  serialization (``OCSDriver.busy_until``) resolves in causal order and
+  reconfiguration contention shows up as queued programs on the shared
+  switches.
+
+Isolation invariant: one job's ``program()`` never touches another
+job's ports — enforced by the orchestrator's port-ownership assertions
+on every dispatch path including mid-barrier giant-ring fault demotion,
+and asserted end to end in tests/test_cluster.py.  A cluster holding
+exactly one job is bit-exact with the single-job engine (same floats,
+same telemetry): the cluster is a strict generalization, not a second
+simulator.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core import phases as ph
+from repro.core.orchestrator import (OCSDriver, PortAllocator,
+                                     RailOrchestrator)
+from repro.core.plane import ControlPlane
+from repro.core.shim import DEFAULT, PROVISIONING
+from repro.sim.opus_sim import EventEngine, SimParams, SimResult, simulate
+from repro.sim.workload import GPUS, build
+
+
+def exp_trace(n: int, mean_gap: float, seed: int = 1) -> List[float]:
+    """Deterministic Poisson-ish arrival times: exponential inter-arrival
+    gaps by inverted CDF over a fixed LCG stream.  No global RNG and no
+    platform dependence — the cluster benchmark commits numbers derived
+    from these, so the trace must reproduce bit-exactly everywhere."""
+    assert n >= 0 and mean_gap >= 0.0
+    x = (seed or 1) & 0x7FFFFFFF
+    out: List[float] = []
+    t = 0.0
+    for _ in range(n):
+        x = (1103515245 * x + 12345) & 0x7FFFFFFF
+        u = (x + 1) / 2147483649.0          # strictly inside (0, 1)
+        t += -mean_gap * math.log(1.0 - u)
+        out.append(t)
+    return out
+
+
+@dataclass(frozen=True)
+class ClusterParams:
+    """Shared-fabric shape: one OCS port space replicated per rail."""
+
+    n_ports: int                  # per-rail OCS port space (all tenants)
+    n_rails: int = 1
+    policy: str = "contiguous"    # PortAllocator policy
+    ocs_latency: float = 0.01
+    nic_linkup: float = 0.0
+    gpu: str = "h200"
+
+
+@dataclass(frozen=True)
+class ClusterJobSpec:
+    """One tenant: a paper-style JobConfig plus its arrival."""
+
+    name: str
+    job: ph.JobConfig
+    arrival: float = 0.0
+    mode: str = "opus_prov"       # opus | opus_prov
+    iterations: int = 2           # warmup + measured, like the engine
+
+    def __post_init__(self):
+        # native/oneshot have no control plane to share — a cluster
+        # tenant must drive the real machinery (simulate() routes those
+        # modes to the analytic path; silently running them through an
+        # opus plane would fake their semantics)
+        assert self.mode in ("opus", "opus_prov"), self.mode
+        assert self.arrival >= 0.0, self.arrival
+
+    @property
+    def n_ranks(self) -> int:
+        """Scale-out ranks = ports needed on every rail."""
+        return self.job.pp * self.job.fsdp * self.job.cp * self.job.ep
+
+
+@dataclass
+class JobRecord:
+    """Lifecycle + outcome of one submitted job."""
+
+    spec: ClusterJobSpec
+    ocs_fail: Optional[Callable[[int], bool]] = None
+    status: str = "queued"        # queued | running | done | rejected
+    admitted: Optional[float] = None
+    finished: Optional[float] = None
+    ports: Optional[Tuple[int, ...]] = None
+    plane: Optional[ControlPlane] = None
+    result: Optional[SimResult] = None
+
+    @property
+    def queueing_delay(self) -> Optional[float]:
+        if self.admitted is None:
+            return None
+        return self.admitted - self.spec.arrival
+
+
+class ClusterSim:
+    """N concurrent jobs through shared per-rail OCS port space."""
+
+    def __init__(self, params: ClusterParams):
+        self.params = params
+        self.allocator = PortAllocator(params.n_ports, params.policy)
+        lat = params.ocs_latency + params.nic_linkup
+        self.rails = [RailOrchestrator(r, OCSDriver(params.n_ports,
+                                                    reconfig_latency=lat))
+                      for r in range(params.n_rails)]
+        self.records: List[JobRecord] = []
+        self.events: List[Dict[str, object]] = []
+        self._ran = False
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, spec: ClusterJobSpec,
+               ocs_fail: Optional[Callable[[int], bool]] = None
+               ) -> JobRecord:
+        assert not self._ran, "submit before run()"
+        assert all(r.spec.name != spec.name for r in self.records), \
+            f"duplicate job name {spec.name!r}"
+        rec = JobRecord(spec, ocs_fail=ocs_fail)
+        self.records.append(rec)
+        return rec
+
+    # -- the merged event timeline -------------------------------------------
+    def run(self) -> "ClusterResult":
+        assert not self._ran, "a ClusterSim runs once"
+        self._ran = True
+        pending = sorted(self.records, key=lambda r: r.spec.arrival)
+        waiting: List[JobRecord] = []
+        # (record, engine, op generator, admission seq); seq keeps the
+        # min() tie-break stable when two engines share a clock value
+        active: List[Tuple[JobRecord, EventEngine, object, int]] = []
+        seq = 0
+
+        def next_active():
+            return min(active, key=lambda a: (a[1].t, a[3]))
+
+        while pending or waiting or active:
+            arrival = pending[0].spec.arrival if pending else math.inf
+            clock = next_active()[1].t if active else math.inf
+            if arrival <= clock:
+                rec = pending.pop(0)
+                if rec.spec.n_ranks > self.params.n_ports:
+                    rec.status = "rejected"     # can NEVER fit
+                    self._sample(rec.spec.arrival, "reject", rec)
+                elif waiting or not self._admit(rec, rec.spec.arrival):
+                    # FIFO: an arrival never jumps an earlier queued job
+                    waiting.append(rec)
+                    self._sample(rec.spec.arrival, "queue", rec)
+                else:
+                    active.append(self._start(rec, seq))
+                    seq += 1
+                continue
+            # a feasible job queues only while others hold its ports, and
+            # every departure drains the queue head while it fits — so a
+            # non-empty queue implies a running job to advance
+            assert active, "FIFO queue non-empty with an idle cluster"
+            entry = next_active()
+            rec, engine, gen, _ = entry
+            try:
+                next(gen)                       # one op of the nearest job
+            except StopIteration:
+                active.remove(entry)
+                self._depart(rec, engine)
+                # departures free ports: re-try the FIFO queue head(s)
+                while waiting and self._admit(waiting[0], rec.finished):
+                    active.append(self._start(waiting.pop(0), seq))
+                    seq += 1
+        return ClusterResult(self.params, self.records, self.events,
+                             self.rails, self.allocator)
+
+    # -- admission / departure ----------------------------------------------
+    def _admit(self, rec: JobRecord, now: float) -> bool:
+        grant = self.allocator.allocate(rec.spec.name, rec.spec.n_ranks)
+        if grant is None:
+            return False
+        mode = PROVISIONING if rec.spec.mode == "opus_prov" else DEFAULT
+        plane = ControlPlane(rec.spec.job, mode=mode, job_id=rec.spec.name,
+                             ocs_fail=rec.ocs_fail, collapse=True,
+                             orchestrators=self.rails, ports=grant, now=now)
+        rec.ports = grant
+        rec.admitted = now
+        rec.status = "running"
+        rec.plane = plane           # handed to _start right after
+        self._sample(now, "admit", rec)
+        return True
+
+    def _start(self, rec: JobRecord,
+               seq: int) -> Tuple[JobRecord, EventEngine, object, int]:
+        wl = build(rec.spec.job, self.params.gpu)
+        engine = EventEngine(
+            wl, SimParams(mode=rec.spec.mode,
+                          ocs_latency=self.params.ocs_latency,
+                          nic_linkup=self.params.nic_linkup,
+                          n_rails=self.params.n_rails),
+            plane=rec.plane, start=rec.admitted,
+            iterations=rec.spec.iterations)
+        return (rec, engine, engine.events(), seq)
+
+    def _depart(self, rec: JobRecord, engine: EventEngine) -> None:
+        rec.finished = engine.t
+        rec.result = engine.result
+        rec.status = "done"
+        rec.plane.release(now=rec.finished)
+        self.allocator.release(rec.spec.name)
+        self._sample(rec.finished, "depart", rec)
+
+    def _sample(self, t: float, event: str, rec: JobRecord) -> None:
+        self.events.append({"t": t, "event": event, "job": rec.spec.name,
+                            **self.allocator.stats()})
+
+
+# ---------------------------------------------------------------------------
+# results
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ClusterResult:
+    params: ClusterParams
+    jobs: List[JobRecord]
+    events: List[Dict[str, object]]
+    rails: List[RailOrchestrator]
+    allocator: PortAllocator
+    _native_cache: Dict[Tuple, float] = field(default_factory=dict)
+
+    def _native_step(self, spec: ClusterJobSpec) -> float:
+        key = (spec.job, self.params.gpu)
+        if key not in self._native_cache:
+            wl = build(spec.job, self.params.gpu)
+            self._native_cache[key] = simulate(
+                wl, SimParams(mode="native")).step_time
+        return self._native_cache[key]
+
+    def job_rows(self) -> List[Dict[str, object]]:
+        """Per-job outcome: overhead vs native plus lifecycle times."""
+        rows = []
+        for rec in self.jobs:
+            row: Dict[str, object] = {
+                "job": rec.spec.name,
+                "model": rec.spec.job.model.name,
+                "n_gpus": rec.spec.job.n_gpus,
+                "n_ranks": rec.spec.n_ranks,
+                "status": rec.status,
+                "arrival": rec.spec.arrival,
+                "queueing_delay": rec.queueing_delay,
+            }
+            if rec.result is not None:
+                m = rec.result.telemetry["measured"]
+                nat = self._native_step(rec.spec)
+                row.update({
+                    "step_time": rec.result.step_time,
+                    "overhead_vs_native":
+                        rec.result.step_time / nat - 1 if nat > 0 else None,
+                    "n_reconfigs": rec.result.n_reconfigs,
+                    "n_barriers": m["n_barriers"],
+                    "n_ports_programmed": m["n_ports_programmed"],
+                })
+            rows.append(row)
+        return rows
+
+    def peak_concurrent_gpus(self) -> int:
+        """Peak GPUs admitted at once (sizes the fabric bill)."""
+        deltas: List[Tuple[float, int]] = []
+        for rec in self.jobs:
+            if rec.admitted is None:
+                continue
+            deltas.append((rec.admitted, rec.spec.job.n_gpus))
+            if rec.finished is not None:
+                deltas.append((rec.finished, -rec.spec.job.n_gpus))
+        peak = cur = 0
+        # departures at time t free ports before an admission at t
+        for _, d in sorted(deltas, key=lambda x: (x[0], x[1])):
+            cur += d
+            peak = max(peak, cur)
+        return peak
+
+    def summary(self) -> Dict[str, object]:
+        """Cluster-level metrics: every int is deterministic (the perf
+        gate exact-matches them); floats are model outputs, equally
+        deterministic but gated with a tolerance."""
+        done = [r for r in self.jobs if r.status == "done"]
+        delays = [r.queueing_delay for r in self.jobs
+                  if r.queueing_delay is not None]
+        utils = [e["utilization"] for e in self.events]
+        frags = [e["fragmentation"] for e in self.events]
+        gpu = GPUS[self.params.gpu]
+        peak_gpus = self.peak_concurrent_gpus()
+        out: Dict[str, object] = {
+            "n_jobs": len(self.jobs),
+            "n_done": len(done),
+            "n_rejected": sum(r.status == "rejected" for r in self.jobs),
+            "total_gpus": sum(r.spec.job.n_gpus for r in self.jobs),
+            "peak_concurrent_gpus": peak_gpus,
+            "makespan": max((r.finished for r in done), default=0.0),
+            "mean_queueing_delay": (sum(delays) / len(delays)
+                                    if delays else 0.0),
+            "max_queueing_delay": max(delays, default=0.0),
+            "peak_utilization": max(utils, default=0.0),
+            "mean_utilization": (sum(utils) / len(utils)
+                                 if utils else 0.0),
+            "peak_fragmentation": max(frags, default=0.0),
+            "allocator": self.allocator.stats(),
+            "rails": {
+                "n_reconfig_events": sum(o.n_reconfig_events
+                                         for o in self.rails),
+                "n_program_calls": sum(o.ocs.n_program_calls
+                                       for o in self.rails),
+                "n_ports_programmed": sum(o.ocs.n_ports_programmed
+                                          for o in self.rails),
+                "n_queued_programs": sum(o.ocs.n_queued_programs
+                                         for o in self.rails),
+                "queue_wait_s": sum(o.ocs.queue_wait_s
+                                    for o in self.rails),
+            },
+        }
+        overheads = [row["overhead_vs_native"] for row in self.job_rows()
+                     if row.get("overhead_vs_native") is not None]
+        out["mean_overhead_vs_native"] = (sum(overheads) / len(overheads)
+                                          if overheads else 0.0)
+        out["max_overhead_vs_native"] = max(overheads, default=0.0)
+        # aggregate network bill at the cluster's peak occupancy (Fig 14
+        # model; per-rail OCS vs electrical packet switch)
+        if peak_gpus > 0:
+            from repro.sim.costmodel import compare
+            part = "eps_800g_cpo" if self.params.gpu == "gb200" \
+                else "eps_400g"
+            c = compare(peak_gpus, gpu.domain, part)
+            out["network_bill"] = {
+                "eps_part": part,
+                "cost_ratio": c["cost_ratio"],
+                "power_ratio": c["power_ratio"],
+            }
+        return out
+
+
+# ---------------------------------------------------------------------------
+# the configs/ catalog as a deterministic tenant mix
+# ---------------------------------------------------------------------------
+
+# (model, tp, pp) templates cycled per arriving tenant; fsdp is derived
+# from the requested ranks-per-job so every template fits the same grant
+CATALOG: Tuple[Tuple[str, int, int], ...] = (
+    ("llama3_8b", 8, 2),
+    ("gemma_7b", 4, 2),
+    ("yi_9b", 8, 4),
+    ("llama_80b", 8, 2),
+)
+
+
+def catalog_jobs(n_jobs: int, ranks_per_job: int, *, mean_gap: float = 5.0,
+                 seed: int = 1, seq_len: int = 4096,
+                 mode: str = "opus_prov") -> List[ClusterJobSpec]:
+    """The i-th cluster tenant, deterministically: cycle the CATALOG
+    templates over a :func:`exp_trace` arrival trace (first arrival
+    pinned to t=0 so the cluster never idles at the front)."""
+    from repro.configs.base import get_config
+    arrivals = [0.0] + exp_trace(max(n_jobs - 1, 0), mean_gap, seed)
+    specs = []
+    for i in range(n_jobs):
+        model_name, tp, pp = CATALOG[i % len(CATALOG)]
+        assert ranks_per_job % pp == 0, (ranks_per_job, pp)
+        fsdp = ranks_per_job // pp
+        job = ph.JobConfig(model=get_config(model_name), tp=tp, fsdp=fsdp,
+                           pp=pp, global_batch=16 * fsdp, seq_len=seq_len,
+                           n_microbatch=pp)
+        specs.append(ClusterJobSpec(f"job{i}", job, arrival=arrivals[i],
+                                    mode=mode))
+    return specs
+
+
+def simulate_cluster(specs: List[ClusterJobSpec], params: ClusterParams,
+                     ocs_fail_by_job: Optional[Dict[str, Callable[[int],
+                                                                  bool]]]
+                     = None) -> ClusterResult:
+    """Convenience driver: submit ``specs`` and run the merged timeline."""
+    sim = ClusterSim(params)
+    for spec in specs:
+        sim.submit(spec, (ocs_fail_by_job or {}).get(spec.name))
+    return sim.run()

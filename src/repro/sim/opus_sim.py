@@ -55,7 +55,7 @@ from repro.core import phases as ph
 from repro.core.plane import ControlPlane
 from repro.core.shim import DEFAULT, PROVISIONING
 from repro.core.windows import TimedOp, Window, windows_of
-from repro.sim.workload import GPUSpec, TimedWorkload
+from repro.sim.workload import TimedWorkload
 
 MGMT_GBPS = 10.0          # CPU frontend network
 MGMT_LAT = 50e-6
@@ -197,106 +197,165 @@ def _mgmt_op(op, t: float, t0: float, timeline: List[TimedOp]) -> float:
     return start + dur
 
 
+class EventEngine:
+    """One job's event-engine run, resumable op by op.
+
+    The former ``_simulate_event`` loop restructured as a generator so the
+    cluster scheduler (``repro.sim.cluster``) can interleave many jobs on
+    one merged timeline: each ``next()`` on :meth:`events` processes
+    exactly one workload op and yields the engine clock.  ``simulate()``
+    drains the generator in one go, so a single-job cluster executes the
+    IDENTICAL floating-point sequence as the single-job engine (asserted
+    bit-exact in tests/test_cluster.py).
+
+    ``plane`` injects a pre-built ControlPlane (cluster mode: shared-rail
+    planes with PortAllocator grants); by default the engine builds its
+    own private-rail plane, exactly as before.  ``start`` offsets the
+    engine clock (a cluster job begins at its admission time); per-
+    iteration quantities are all relative to the iteration start, so
+    SimResult is offset-invariant in every field except the timeline's
+    absolute clock base.
+    """
+
+    def __init__(self, wl: TimedWorkload, params: SimParams, *,
+                 ocs_fail: Optional[Callable[[int], bool]] = None,
+                 collapse: bool = True,
+                 plane: Optional[ControlPlane] = None,
+                 start: float = 0.0, iterations: int = 2):
+        assert iterations >= 2, "warmup + at least one measured iteration"
+        self.wl = wl
+        self.params = params
+        self.plane = plane if plane is not None else build_plane(
+            wl.job, params, ocs_fail, collapse=collapse)
+        self.plane.profile(wl.ops)
+        self.iterations = iterations
+        self.t = start
+        self.result: Optional[SimResult] = None
+        self._started = False
+
+    def events(self):
+        """Generator: one workload op per step, yielding the clock after
+        each; ``self.result`` is populated when it is exhausted."""
+        assert not self._started, "events() is single-shot per engine"
+        self._started = True
+        wl, params, plane = self.wl, self.params, self.plane
+        job, gpu = wl.job, wl.gpu
+        ctrl_sync, ctrl_async = params.resolved(job.n_gpus)
+        _, phase_of = _phase_info(tuple(wl.ops))
+        dilation = _giant_ring_dilation(job)  # fault fallback bw factors
+
+        t = self.t
+        pending_ready: Optional[float] = None   # provisioned reconfig's ACK
+        step_time = 0.0
+        timeline: List[TimedOp] = []
+        n_reconfigs = n_writes = 0
+        exposed_r = exposed_c = 0.0
+        tel0: Dict[str, object] = {}
+        for iteration in range(self.iterations):  # warmup + measured
+            plane.start_iteration()
+            if iteration == self.iterations - 1:
+                tel0 = plane.telemetry()  # measured-iteration deltas base
+            t0 = t
+            timeline = []
+            n_reconfigs = n_writes = 0
+            exposed_r = exposed_c = 0.0
+            prev_phase = -1
+            for op in wl.ops:
+                t += op.compute_before
+                if op.scale == "mgmt":
+                    t = _mgmt_op(op, t, t0, timeline)
+                    self.t = t
+                    yield t
+                    continue
+                if op.scale == "scale_up":
+                    self.t = t
+                    yield t
+                    continue  # TP never touches the rails
+
+                pi = phase_of[op.uid]
+                new_phase = pi != prev_phase
+                if new_phase and pending_ready is not None:
+                    # §4.2: a provisioned reconfiguration is exposed only
+                    # past the window; split residue between control and
+                    # OCS time
+                    exp = max(0.0, pending_ready - t)
+                    exposed_c += min(exp, ctrl_async)
+                    exposed_r += max(0.0, exp - ctrl_async)
+                    t = max(t, pending_ready)
+                    pending_ready = None
+
+                # Algorithm 1 on every rank (one batched plane call; the
+                # barrier completes at the last class write)
+                ev = plane.pre_comm_all(op, now=t)
+                write = ev.write if (ev.write is not None
+                                     and ev.write.complete) else None
+                if write is not None:
+                    n_writes += 1
+                    if write.reconfigured:
+                        # on-demand: barrier + OCS latency fully exposed
+                        n_reconfigs += 1
+                        exposed_c += ctrl_sync
+                        exposed_r += write.ack_time - t
+                        t = write.ack_time + ctrl_sync
+                    else:
+                        # lock-free write (suppressed / per-op PP)
+                        exposed_c += PP_OP_CTRL
+                        t += PP_OP_CTRL
+
+                # the collective itself, at the mode's bandwidth
+                bw = gpu.scale_out_gbps
+                if plane.fallback_giant_ring:
+                    # reduced-bandwidth static ring: a k-rank subgroup
+                    # ring embedded in the N-port cycle dilutes every link
+                    # by the forwarding hops, ~k/N effective bandwidth
+                    # (DESIGN.md §5)
+                    bw *= dilation.get(op.dim, 1.0)
+                start = t
+                t = start + wl.comm_time(op, bandwidth_gbps=bw)
+                timeline.append(TimedOp(op, start - t0, t - t0))
+                prev_phase = pi
+
+                # Algorithm 2 on every rank (provisioning writes ride
+                # here, dispatched after the async control residue)
+                ev = plane.post_comm_all(op, now=t + ctrl_async)
+                write = ev.write if (ev.write is not None
+                                     and ev.write.complete) else None
+                if write is not None:
+                    n_writes += 1
+                    if write.reconfigured:
+                        n_reconfigs += 1
+                        pending_ready = write.ack_time
+                    else:
+                        exposed_c += PP_OP_CTRL
+                        t += PP_OP_CTRL
+                self.t = t
+                yield t
+            step_time = t - t0
+        # plane telemetry counts the WHOLE plane lifetime (job
+        # registration + warmup + measured iteration); the "measured"
+        # sub-dict is the steady-state per-iteration delta
+        tel = plane.telemetry()
+        tel["measured"] = {k: tel[k] - tel0[k] for k in tel
+                           if isinstance(tel[k], int)
+                           and not isinstance(tel[k], bool)}
+        tel["calls"] = plane.call_stats()   # perf tracking (BENCH json)
+        self.result = SimResult(
+            step_time, n_reconfigs, n_writes, exposed_r, exposed_c,
+            timeline, engine="event" if plane.collapse else "event_full",
+            telemetry=tel)
+
+    def run(self) -> SimResult:
+        for _ in self.events():
+            pass
+        assert self.result is not None
+        return self.result
+
+
 def _simulate_event(wl: TimedWorkload, params: SimParams,
                     ocs_fail: Optional[Callable[[int], bool]],
                     collapse: bool = True) -> SimResult:
-    job, gpu = wl.job, wl.gpu
-    plane = build_plane(job, params, ocs_fail, collapse=collapse)
-    plane.profile(wl.ops)
-    ctrl_sync, ctrl_async = params.resolved(job.n_gpus)
-    _, phase_of = _phase_info(tuple(wl.ops))
-    dilation = _giant_ring_dilation(job)  # fault fallback bw factors
-
-    t = 0.0
-    pending_ready: Optional[float] = None   # provisioned reconfig's ACK
-    step_time = 0.0
-    timeline: List[TimedOp] = []
-    n_reconfigs = n_writes = 0
-    exposed_r = exposed_c = 0.0
-    tel0: Dict[str, object] = {}
-    for iteration in range(2):            # warmup (profiling) + measured
-        plane.start_iteration()
-        if iteration == 1:
-            tel0 = plane.telemetry()      # measured-iteration deltas base
-        t0 = t
-        timeline = []
-        n_reconfigs = n_writes = 0
-        exposed_r = exposed_c = 0.0
-        prev_phase = -1
-        for op in wl.ops:
-            t += op.compute_before
-            if op.scale == "mgmt":
-                t = _mgmt_op(op, t, t0, timeline)
-                continue
-            if op.scale == "scale_up":
-                continue  # TP never touches the rails
-
-            pi = phase_of[op.uid]
-            new_phase = pi != prev_phase
-            if new_phase and pending_ready is not None:
-                # §4.2: a provisioned reconfiguration is exposed only past
-                # the window; split residue between control and OCS time
-                exp = max(0.0, pending_ready - t)
-                exposed_c += min(exp, ctrl_async)
-                exposed_r += max(0.0, exp - ctrl_async)
-                t = max(t, pending_ready)
-                pending_ready = None
-
-            # Algorithm 1 on every rank (one batched plane call; the
-            # barrier completes at the last class write)
-            ev = plane.pre_comm_all(op, now=t)
-            write = ev.write if (ev.write is not None
-                                 and ev.write.complete) else None
-            if write is not None:
-                n_writes += 1
-                if write.reconfigured:
-                    # on-demand: barrier + OCS latency fully exposed
-                    n_reconfigs += 1
-                    exposed_c += ctrl_sync
-                    exposed_r += write.ack_time - t
-                    t = write.ack_time + ctrl_sync
-                else:
-                    # lock-free write (suppressed / per-op PP)
-                    exposed_c += PP_OP_CTRL
-                    t += PP_OP_CTRL
-
-            # the collective itself, at the mode's bandwidth
-            bw = gpu.scale_out_gbps
-            if plane.fallback_giant_ring:
-                # reduced-bandwidth static ring: a k-rank subgroup ring
-                # embedded in the N-port cycle dilutes every link by the
-                # forwarding hops, ~k/N effective bandwidth (DESIGN.md §5)
-                bw *= dilation.get(op.dim, 1.0)
-            start = t
-            t = start + wl.comm_time(op, bandwidth_gbps=bw)
-            timeline.append(TimedOp(op, start - t0, t - t0))
-            prev_phase = pi
-
-            # Algorithm 2 on every rank (provisioning writes ride here,
-            # dispatched after the async control residue)
-            ev = plane.post_comm_all(op, now=t + ctrl_async)
-            write = ev.write if (ev.write is not None
-                                 and ev.write.complete) else None
-            if write is not None:
-                n_writes += 1
-                if write.reconfigured:
-                    n_reconfigs += 1
-                    pending_ready = write.ack_time
-                else:
-                    exposed_c += PP_OP_CTRL
-                    t += PP_OP_CTRL
-        step_time = t - t0
-    # plane telemetry counts the WHOLE plane lifetime (job registration +
-    # warmup + measured iteration); the "measured" sub-dict is the
-    # steady-state per-iteration delta
-    tel = plane.telemetry()
-    tel["measured"] = {k: tel[k] - tel0[k] for k in tel
-                       if isinstance(tel[k], int)
-                       and not isinstance(tel[k], bool)}
-    tel["calls"] = plane.call_stats()   # perf tracking (BENCH_opus_sim)
-    return SimResult(step_time, n_reconfigs, n_writes, exposed_r, exposed_c,
-                     timeline, engine="event" if collapse else "event_full",
-                     telemetry=tel)
+    return EventEngine(wl, params, ocs_fail=ocs_fail,
+                       collapse=collapse).run()
 
 
 # ---------------------------------------------------------------------------

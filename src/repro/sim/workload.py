@@ -7,7 +7,6 @@ follow the paper's evaluation platforms (§5).
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 from typing import Dict, List
 

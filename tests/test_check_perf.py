@@ -1,0 +1,162 @@
+"""benchmarks/check_perf.py — the CI perf-regression gate, verified by
+unit test (the acceptance criterion: CI fails on a synthetic regression
+without anyone having to break CI to prove it)."""
+import copy
+import json
+
+import pytest
+
+from benchmarks.check_perf import compare, main, summary_markdown
+
+BASE = {
+    "bench": "opus_sim_2048gpu_event_engine",
+    "n_gpus": 2048,
+    "engine": "event",
+    "wall_s": 0.04,
+    "modeled_step_s": 13.600668,
+    "overhead_vs_native": 0.002576,
+    "n_reconfigs": 6,
+    "plane_calls": {"n_plane_calls": 2328, "replayed_iterations": 1},
+    "measured_telemetry": {"n_barriers": 8, "n_dispatches": 6},
+}
+
+
+def test_identical_records_pass():
+    assert compare(copy.deepcopy(BASE), BASE) == []
+
+
+def test_wall_clock_regression_fails_and_improvement_passes():
+    slow = copy.deepcopy(BASE)
+    slow["wall_s"] = 10.0                     # >> 1.5x + 2 s slack
+    errs = compare(slow, BASE)
+    assert len(errs) == 1 and "wall-clock regression" in errs[0]
+    fast = copy.deepcopy(BASE)
+    fast["wall_s"] = 0.001
+    assert compare(fast, BASE) == []
+
+
+def test_wall_slack_absorbs_machine_noise_on_subsecond_benches():
+    noisy = copy.deepcopy(BASE)
+    noisy["wall_s"] = 0.5                     # 12x, but absolute tiny
+    assert compare(noisy, BASE) == []
+    assert compare(noisy, BASE, wall_slack=0.0) != []
+
+
+def test_counter_drift_is_exact_match_failure():
+    drift = copy.deepcopy(BASE)
+    drift["measured_telemetry"]["n_barriers"] = 9
+    errs = compare(drift, BASE)
+    assert len(errs) == 1
+    assert "counter drift 8 -> 9" in errs[0]
+    assert "measured_telemetry.n_barriers" in errs[0]
+
+
+def test_plane_call_drift_caught():
+    """The scenario the gate exists for: losing the replay cache shows up
+    as shim-walk/plane-call counter drift, not just wall time."""
+    drift = copy.deepcopy(BASE)
+    drift["plane_calls"]["replayed_iterations"] = 0
+    assert any("replayed_iterations" in e for e in compare(drift, BASE))
+
+
+def test_float_leaves_use_relative_tolerance():
+    ok = copy.deepcopy(BASE)
+    ok["modeled_step_s"] = BASE["modeled_step_s"] * (1 + 1e-9)
+    assert compare(ok, BASE) == []
+    bad = copy.deepcopy(BASE)
+    bad["modeled_step_s"] = BASE["modeled_step_s"] * 1.01
+    assert any("modeled_step_s" in e for e in compare(bad, BASE))
+
+
+def test_missing_and_extra_keys_are_errors():
+    missing = copy.deepcopy(BASE)
+    del missing["n_reconfigs"]
+    assert any("missing" in e for e in compare(missing, BASE))
+    extra = copy.deepcopy(BASE)
+    extra["novel"] = 1
+    assert any("unexpected new key" in e for e in compare(extra, BASE))
+
+
+def test_list_structures_compared_elementwise():
+    base = {"points": [{"summary": {"n_done": 4}}]}
+    same = {"points": [{"summary": {"n_done": 4}}]}
+    assert compare(same, base) == []
+    drift = {"points": [{"summary": {"n_done": 3}}]}
+    assert any("points[0]" in e for e in compare(drift, base))
+    short = {"points": []}
+    assert any("entries" in e for e in compare(short, base))
+
+
+def test_bool_leaves_never_hit_the_int_rule():
+    base = {"fallback": False, "n": 1}
+    assert compare({"fallback": False, "n": 1}, base) == []
+    errs = compare({"fallback": True, "n": 1}, base)
+    assert len(errs) == 1 and "fallback" in errs[0]
+
+
+def test_main_exit_codes_and_summary(tmp_path):
+    b = tmp_path / "base.json"
+    c = tmp_path / "cur.json"
+    md = tmp_path / "summary.md"
+    b.write_text(json.dumps(BASE))
+    c.write_text(json.dumps(BASE))
+    assert main(["--pair", str(b), str(c),
+                 "--summary-md", str(md)]) == 0
+    assert "opus_sim_2048gpu_event_engine" in md.read_text()
+    bad = copy.deepcopy(BASE)
+    bad["measured_telemetry"]["n_dispatches"] = 7
+    c.write_text(json.dumps(bad))
+    assert main(["--pair", str(b), str(c)]) == 1
+
+
+def test_main_requires_a_pair():
+    with pytest.raises(SystemExit):
+        main([])
+
+
+def test_summary_markdown_renders_cluster_points():
+    rec = {"bench": "opus_cluster_shared_rails", "wall_s": 3.5,
+           "points": [{"label": "4x64", "summary": {
+               "total_gpus": 1792, "peak_utilization": 0.89,
+               "peak_fragmentation": 0.6,
+               "mean_overhead_vs_native": 0.0911,
+               "max_queueing_delay": 0.0,
+               "rails": {"n_queued_programs": 6}}}]}
+    md = summary_markdown({"BENCH_opus_cluster.json": rec})
+    assert "| 4x64 | 1792 |" in md
+    assert "9.11%" in md
+
+
+def test_perf_report_fails_when_replay_cache_not_promoted(monkeypatch,
+                                                          tmp_path):
+    """Satellite bugfix: --perf must exit non-zero (not silently record)
+    when the event engine fell back to a live walk because the replay
+    cache failed to promote — a cache regression must never hide inside
+    a plausible-looking BENCH json."""
+    import benchmarks.run as brun
+    import repro.sim.opus_sim as osim
+    real = osim.simulate
+
+    def cache_lost(wl, params, **kw):
+        r = real(wl, params, **kw)
+        if r.telemetry is not None and "calls" in r.telemetry:
+            r.telemetry["calls"] = dict(r.telemetry["calls"],
+                                        replayed_iterations=0)
+        return r
+
+    monkeypatch.setattr(osim, "simulate", cache_lost)
+    out = tmp_path / "BENCH.json"
+    with pytest.raises(SystemExit) as ei:
+        brun.perf_report(out_path=str(out))
+    assert ei.value.code == 1
+    assert not out.exists()                   # nothing recorded
+
+
+def test_committed_baselines_self_compare():
+    """The committed baselines must pass their own gate (guards both the
+    baseline files and the rule set against bit-rot)."""
+    from pathlib import Path
+    for name in ("BENCH_opus_sim.json", "BENCH_opus_cluster.json"):
+        rec = json.loads(
+            Path("benchmarks/baselines", name).read_text())
+        assert compare(copy.deepcopy(rec), rec) == []

@@ -1,0 +1,88 @@
+"""Network cost & power model (paper Fig 14): the headline ratios must
+EMERGE from the component bill, and per-rail switch counts must scale as
+ceil(rail_size / ports_per_switch)."""
+import math
+
+import pytest
+
+from repro.sim.costmodel import (OCS_PORTS_PER_LINK, PARTS, FabricBill,
+                                 compare, rail_fabric)
+
+
+def test_paper_headline_ratios_at_2048_gpus_h200():
+    """Fig 14 @ 2,048 H200 GPUs (8-GPU scale-up domains, 400G rails):
+    >23x power reduction and ~4x cost saving for OCS rails vs the
+    electrical packet-switch fabric (paper: 23.86x / 4.27x)."""
+    c = compare(2048, 8, "eps_400g")
+    assert c["power_ratio"] > 23.0
+    assert 3.5 < c["cost_ratio"] < 5.0
+    # and the paper's quoted numbers to 2% (model: 24.18x / 4.27x)
+    assert c["power_ratio"] == pytest.approx(23.86, rel=0.02)
+    assert c["cost_ratio"] == pytest.approx(4.27, rel=0.02)
+
+
+def test_gb200_cpo_comparison_still_favours_ocs():
+    """800G CPO rails double the OCS ports per link; the bill still
+    lands an order of magnitude apart on power."""
+    c = compare(2048, 8, "eps_800g_cpo")
+    assert c["power_ratio"] > 10.0
+    assert c["cost_ratio"] > 1.5
+
+
+@pytest.mark.parametrize("n_gpus", [128, 512, 2048, 8192])
+@pytest.mark.parametrize("part_name", ["eps_400g", "eps_800g_cpo", "ocs"])
+def test_switch_count_scales_as_ceil_rail_size_over_ports(n_gpus,
+                                                          part_name):
+    domain = 8
+    bill = rail_fabric(n_gpus, domain, part_name)
+    part = PARTS[part_name]
+    rail_size = n_gpus // domain
+    per_rail = math.ceil(rail_size / part.ports)
+    assert bill.n_switches == domain * per_rail
+    assert isinstance(bill, FabricBill)
+    assert bill.cost > 0 and bill.power > 0
+
+
+def test_800g_links_double_the_ocs_ports_per_link():
+    """An 800G NIC link lands on two OCS fiber ports (2x400G lambdas):
+    the OCS rail bill must size for 2x the ports."""
+    ppl = OCS_PORTS_PER_LINK["eps_800g_cpo"]
+    assert ppl == 2
+    one = rail_fabric(2048, 8, "ocs", ports_per_link=1)
+    two = rail_fabric(2048, 8, "ocs", ports_per_link=ppl)
+    assert two.n_switches >= one.n_switches
+    assert two.cost > one.cost
+
+
+def test_partial_chassis_billed_fractionally():
+    """A half-used chassis costs half: the per-port amortization keeps
+    the ratios smooth across chassis boundaries."""
+    part = PARTS["eps_400g"]                   # 64 ports
+    full = rail_fabric(64 * 8, 8, "eps_400g")  # rail_size = 64: 1 chassis
+    half = rail_fabric(32 * 8, 8, "eps_400g")  # rail_size = 32: half used
+    # switch-chassis share halves; optics scale per port anyway
+    chassis_full = full.cost - 8 * 64 * part.optics_cost
+    chassis_half = half.cost - 8 * 32 * part.optics_cost
+    assert chassis_half == pytest.approx(chassis_full / 2)
+
+
+def test_crossing_a_chassis_boundary_adds_switches():
+    """ocs chassis = 384 ports: a 385-port rail needs 2 per rail."""
+    at = rail_fabric(384 * 8, 8, "ocs")
+    past = rail_fabric(385 * 8, 8, "ocs")
+    assert at.n_switches == 8
+    assert past.n_switches == 16
+
+
+def test_per_gpu_properties():
+    bill = rail_fabric(2048, 8, "ocs")
+    assert bill.cost_per_gpu == pytest.approx(bill.cost / 2048)
+    assert bill.power_per_gpu == pytest.approx(bill.power / 2048)
+
+
+def test_power_gap_grows_with_scale_never_shrinks_below_headline():
+    """The ratio is scale-stable across the paper's 128-2,048 GPU range
+    (both fabrics scale linearly in rails x ports)."""
+    ratios = [compare(n, 8, "eps_400g")["power_ratio"]
+              for n in (128, 256, 512, 1024, 2048)]
+    assert all(r > 20.0 for r in ratios)

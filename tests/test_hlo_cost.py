@@ -1,7 +1,6 @@
 """Trip-count-corrected HLO cost extraction (the roofline's data source)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import NamedSharding, PartitionSpec as P
 

@@ -1,12 +1,10 @@
 """Schedule/phase/window model vs the paper's reported counts."""
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import get_config
 from repro.core.phases import (CommOp, JobConfig, build_phase_table,
-                               count_reconfigs, count_windows,
-                               eq5_window_count, iteration_schedule,
-                               one_f_one_b)
+                               count_reconfigs, eq5_window_count,
+                               iteration_schedule, one_f_one_b)
 
 
 CFG = get_config("llama3_8b")

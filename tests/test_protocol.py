@@ -5,7 +5,7 @@ from repro.configs.base import get_config
 from repro.core.controller import Controller, GroupState
 from repro.core.orchestrator import OCSDriver, RailOrchestrator
 from repro.core.phases import JobConfig, iteration_schedule
-from repro.core.shim import DEFAULT, PROVISIONING, Shim, table_from_ops
+from repro.core.shim import DEFAULT, PROVISIONING, Shim
 from repro.core.topo import JobPlacement, TopoId
 
 
@@ -76,8 +76,8 @@ def test_giant_ring_fallback_on_persistent_failure():
     ctrl, orchs = _rig()
     # a PP write CHANGES digits (1,1)->(0,0), forcing a dispatch whose OCS
     # persistently times out
-    r = ctrl.topo_write(0, "pp", 0, asym_way=0)
-    r = ctrl.topo_write(1, "pp", 0, asym_way=0,
+    ctrl.topo_write(0, "pp", 0, asym_way=0)
+    ctrl.topo_write(1, "pp", 0, asym_way=0,
                         ocs_fail=lambda attempt: True)
     assert ctrl.fallback_giant_ring
     assert any("giant ring" in s for s in ctrl.failure_log)
@@ -109,7 +109,7 @@ def test_shim_g1_lock_during_phase_shift():
     shim.profile(ops)
     scale_out = [o for o in ops if o.scale == "scale_out"]
     first = scale_out[0]
-    acts = shim.pre_comm(first)
+    shim.pre_comm(first)
     assert shim.topology_busy            # lock held (G1)
     shim.post_comm(first)
     # lock releases only at the phase's LAST op
@@ -159,7 +159,6 @@ def test_shim_routes_mgmt_to_frontend():
 
 def test_network_backend_g2_rejection():
     """The analytical backend rejects reconfigs with traffic in flight."""
-    import numpy as np
     from repro.sim.network import NetConfig, ReconfigurableBackend, \
         ring_matrix
     cfg = NetConfig(n_ranks=4, link_gbps=100.0, reconfig_latency=0.01)

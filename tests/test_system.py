@@ -1,8 +1,6 @@
 """End-to-end system behaviour: train driver, restart determinism,
 compressed HSDP, and the dry-run machinery at test scale."""
 import jax
-import jax.numpy as jnp
-import pytest
 
 from repro.launch.train import main as train_main
 

@@ -1,13 +1,12 @@
 """TopoId encoding, sub-mapping decomposition, orchestrator dispatch
 (paper §4.1, Fig 8) — including hypothesis property tests."""
-import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro.core.orchestrator import OCSDriver, RailOrchestrator
 from repro.core.topo import (JobPlacement, TopoId, affected_ways,
                              build_submapping, diff_digits, full_mapping,
                              naive_storage, opus_storage, ports_per_event,
                              ring_pairs)
-from repro.core.orchestrator import OCSDriver, RailOrchestrator
 
 
 @given(st.lists(st.integers(0, 9), min_size=1, max_size=10))
