@@ -100,7 +100,27 @@ def summary_markdown(records: Dict[str, dict]) -> str:
     for name, rec in records.items():
         lines.append(f"### `{rec.get('bench', name)}`")
         lines.append("")
-        if "points" in rec:
+        if "backends" in rec:
+            lines.append("| backend | mode | overhead | reconfigs | "
+                         "$/GPU | W/GPU |")
+            lines.append("|---|---|---:|---:|---:|---:|")
+            for b in rec["backends"]:
+                bill = b["bill"]
+                radix = "" if b["radix"] is None else f" (r{b['radix']})"
+                lines.append(
+                    f"| {b['technology']}{radix} "
+                    f"| {b['mode']} "
+                    f"| {100 * b['overhead_vs_native']:.2f}% "
+                    f"| {b['n_reconfigs']} "
+                    f"| {bill['cost_per_gpu']:.0f} "
+                    f"| {bill['power_per_gpu']:.2f} |")
+            for c in rec.get("cluster_contention", []):
+                lines.append(
+                    f"- shared-rail contention on **{c['backend']}**: "
+                    f"{c['n_queued_programs']} queued programs, "
+                    f"{c['queue_wait_s']:.3f}s switch-busy wait")
+            lines.append(f"\nwall: {rec['wall_s']}s")
+        elif "points" in rec:
             lines.append("| point | GPUs | peak util | frag (peak) | "
                          "mean overhead | max queue delay | OCS queued |")
             lines.append("|---|---:|---:|---:|---:|---:|---:|")

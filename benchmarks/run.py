@@ -3,6 +3,7 @@
     PYTHONPATH=src python -m benchmarks.run [--skip-roofline]
     PYTHONPATH=src python -m benchmarks.run --perf     # BENCH_opus_sim.json
     PYTHONPATH=src python -m benchmarks.run --cluster  # BENCH_opus_cluster.json
+    PYTHONPATH=src python -m benchmarks.run --backend  # BENCH_opus_fabric.json
 
 Prints each paper artifact's reproduction and a summary block, then the
 roofline table assembled from results/dryrun/*.json (produced by
@@ -13,8 +14,11 @@ recomputed here — benches must stay single-device-fast).
 (the rank-equivalence-class control plane) and writes the wall-clock plus
 plane-call counters to ``BENCH_opus_sim.json``; ``--cluster`` sweeps
 4-32 concurrent jobs over shared per-rail OCS port space and writes
-``BENCH_opus_cluster.json``.  CI runs both after the smoke subset and
-gates them against benchmarks/baselines/ via benchmarks/check_perf.py
+``BENCH_opus_cluster.json``; ``--backend`` sweeps the SwitchBackend axis
+(packet / patch panel / crossbar / OCS array, DESIGN.md §10) and writes
+``BENCH_opus_fabric.json`` — timing AND the Fig-14 bill per row, both
+derived from one FabricSpec.  CI runs all three after the smoke subset
+and gates them against benchmarks/baselines/ via benchmarks/check_perf.py
 (wall-clock ratio + exact counter match).
 """
 from __future__ import annotations
@@ -109,6 +113,103 @@ def perf_report(out_path: str = "BENCH_opus_sim.json") -> dict:
     return rec
 
 
+def fabric_report(out_path: str = "BENCH_opus_fabric.json") -> dict:
+    """SwitchBackend sweep (DESIGN.md §10): the same 512-GPU workload on
+    every backend, each row timed through the REAL control plane and
+    billed (Fig 14) from the SAME FabricSpec — one object, both numbers.
+    A second section runs the 4-tenant shared-rail cluster on a crossbar
+    vs an ACOS-style OCS array (per-tenant sub-switches): the array's
+    independent sub-switch clocks remove cross-tenant reconfiguration
+    queueing while the bill stays per-port comparable."""
+    from repro.configs.base import get_config
+    from repro.core import phases as ph
+    from repro.sim.cluster import (ClusterParams, catalog_jobs,
+                                   simulate_cluster)
+    from repro.sim.costmodel import rail_fabric
+    from repro.sim.opus_sim import SimParams, simulate
+    from repro.sim.workload import GPUS, build
+
+    job = ph.JobConfig(model=get_config("llama_80b"), tp=8, fsdp=32, pp=2,
+                       global_batch=16 * 32, seq_len=4096, n_microbatch=2)
+    wl = build(job, "h200")
+    gpu = GPUS["h200"]
+    t_all = time.perf_counter()
+    sweep = (
+        ("native_packet", SimParams(mode="native")),
+        ("oneshot_patch_panel", SimParams(mode="oneshot")),
+        ("opus_crossbar", SimParams(mode="opus", ocs_latency=0.01)),
+        ("opus_prov_crossbar", SimParams(mode="opus_prov",
+                                         ocs_latency=0.01)),
+        # whole-job sub-switch: an array element exactly the rail size —
+        # same timing as the crossbar, an order cheaper per chassis
+        ("opus_prov_ocs_array_r64", SimParams(mode="opus_prov",
+                                              ocs_latency=0.01,
+                                              backend="ocs_array",
+                                              radix=64)),
+    )
+    print("== backend sweep: one FabricSpec, timing AND the bill ==")
+    rows = []
+    nat = None
+    for label, p in sweep:
+        spec = p.fabric_spec()
+        r = simulate(wl, p)
+        if nat is None:       # the sweep's first row IS the baseline
+            assert p.mode == "native", "sweep must lead with native"
+            nat = r.step_time
+        bill = rail_fabric(job.n_gpus, gpu.domain, spec)
+        m = r.telemetry["measured"]
+        rows.append({
+            "label": label, "mode": p.mode,
+            "technology": spec.technology,
+            "radix": spec.radix, "part": spec.part_name,
+            "modeled_step_s": round(r.step_time, 6),
+            "overhead_vs_native": round(r.step_time / nat - 1, 6),
+            "n_reconfigs": r.n_reconfigs,
+            "n_barriers": m["n_barriers"],
+            "n_dispatches": m["n_dispatches"],
+            "n_ports_programmed": m["n_ports_programmed"],
+            "bill": {
+                "n_switches": bill.n_switches,
+                "cost": round(bill.cost, 2),
+                "power": round(bill.power, 2),
+                "cost_per_gpu": round(bill.cost_per_gpu, 4),
+                "power_per_gpu": round(bill.power_per_gpu, 4),
+            },
+        })
+        print(f"  {label:26s} ({spec.technology:12s}): "
+              f"{100 * (r.step_time / nat - 1):6.2f}% overhead, "
+              f"{r.n_reconfigs} reconfigs, "
+              f"${bill.cost_per_gpu:7.0f}/GPU {bill.power_per_gpu:5.2f} "
+              f"W/GPU")
+
+    contention = []
+    for backend, radix in (("crossbar_ocs", None), ("ocs_array", 16)):
+        specs = catalog_jobs(4, 16, mean_gap=0.5)
+        res = simulate_cluster(specs, ClusterParams(
+            n_ports=64, policy="contiguous", ocs_latency=0.01,
+            backend=backend, radix=radix))
+        s = res.summary()
+        contention.append({
+            "backend": backend, "radix": radix,
+            "n_reconfig_events": s["rails"]["n_reconfig_events"],
+            "n_queued_programs": s["rails"]["n_queued_programs"],
+            "queue_wait_s": round(s["rails"]["queue_wait_s"], 6),
+            "mean_overhead_vs_native":
+                round(s["mean_overhead_vs_native"], 6),
+        })
+        print(f"  4-tenant shared rail on {backend:12s}"
+              f"{'' if radix is None else f' (radix {radix})'}: "
+              f"{s['rails']['n_queued_programs']} queued programs, "
+              f"{s['rails']['queue_wait_s']:.3f}s switch-busy wait")
+    wall = time.perf_counter() - t_all
+    rec = {"bench": "opus_fabric_backend_sweep", "n_gpus": job.n_gpus,
+           "wall_s": round(wall, 4), "backends": rows,
+           "cluster_contention": contention}
+    Path(out_path).write_text(json.dumps(rec, indent=2) + "\n")
+    print(f"  wall={wall:.3f}s  -> {out_path}")
+    return rec
+
+
 # (n_jobs, ranks_per_job, shared ports per rail, allocation policy):
 # capacity-rich 4-job point, then increasingly multiplexed mixes where
 # arrivals queue on port space and reconfigs contend on the shared OCS
@@ -167,6 +268,10 @@ def main():
     ap.add_argument("--cluster", action="store_true",
                     help="write BENCH_opus_cluster.json (multi-job shared-"
                          "rail sweep: ports, queueing, contention) and exit")
+    ap.add_argument("--backend", action="store_true",
+                    help="write BENCH_opus_fabric.json (SwitchBackend "
+                         "sweep: timing + Fig-14 bill per FabricSpec) "
+                         "and exit")
     args = ap.parse_args()
 
     if args.perf:
@@ -174,6 +279,9 @@ def main():
         return 0
     if args.cluster:
         cluster_report()
+        return 0
+    if args.backend:
+        fabric_report()
         return 0
 
     headlines = {}

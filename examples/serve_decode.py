@@ -2,6 +2,10 @@
 batch-sharded decode (decode_32k cell analogue) and context-sharded decode
 (long_500k analogue, flash-decoding split-K merge across rails).
 
+Each serve run ends with ``--plane-report`` — the same control-plane
+mapping the train path prints (one simulated steady-state iteration
+through the real Shim/Controller/RailOrchestrator stack).
+
     PYTHONPATH=src python examples/serve_decode.py
 """
 import os
@@ -10,18 +14,22 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 from repro.launch.serve import main as serve_main
 
+PLANE = ["--plane-report", "--ocs-latency", "0.01"]
+
 
 def main():
     print("=== batched decode, batch sharded over 4 rails ===")
     serve_main(["--arch", "yi_9b", "--smoke", "--mesh", "4x2",
-                "--batch", "8", "--prompt-len", "12", "--gen", "20"])
+                "--batch", "8", "--prompt-len", "12", "--gen", "20"]
+               + PLANE)
     print("\n=== long-context decode, KV cache sharded over rails ===")
     serve_main(["--arch", "h2o_danube_3_4b", "--smoke", "--mesh", "4x2",
                 "--batch", "1", "--prompt-len", "16", "--gen", "16",
-                "--context-shard"])
+                "--context-shard"] + PLANE)
     print("\n=== attention-free decode (mamba2): zero rail traffic ===")
     serve_main(["--arch", "mamba2_370m", "--smoke", "--mesh", "4x2",
-                "--batch", "8", "--prompt-len", "12", "--gen", "20"])
+                "--batch", "8", "--prompt-len", "12", "--gen", "20"]
+               + PLANE)
 
 
 if __name__ == "__main__":

@@ -13,11 +13,14 @@ and reconfiguration contention through the real control plane:
         --jobs 8 --ranks-per-job 32 --ports 96 --policy contiguous
 """
 import argparse
+import sys
+from dataclasses import replace
 
 from repro.configs.base import get_config
+from repro.core.fabricspec import CrossSubSwitchError
 from repro.core.phases import JobConfig, count_reconfigs
 from repro.sim.cluster import ClusterParams, catalog_jobs, simulate_cluster
-from repro.sim.costmodel import compare
+from repro.sim.costmodel import OCS_PORTS_PER_LINK, compare
 from repro.sim.opus_sim import SimParams, simulate
 from repro.sim.workload import GPUS, build
 
@@ -37,10 +40,13 @@ def run_cluster(args):
                          mean_gap=args.mean_gap)
     res = simulate_cluster(specs, ClusterParams(
         n_ports=n_ports, n_rails=args.rails, policy=args.policy,
-        ocs_latency=0.01, gpu=args.gpu))
+        ocs_latency=0.01, gpu=args.gpu, backend=args.backend,
+        radix=args.radix))
     s = res.summary()
     print(f"{args.jobs} jobs x {args.ranks_per_job} ranks on {n_ports} "
-          f"shared ports/rail ({args.policy}), {s['total_gpus']} GPUs:")
+          f"shared ports/rail ({args.policy}, {args.backend}"
+          f"{'' if args.radix is None else f' radix {args.radix}'}), "
+          f"{s['total_gpus']} GPUs:")
     print(f"  {'job':8s} {'model':22s} {'gpus':>5s} {'queued':>8s} "
           f"{'step':>8s} {'overhead':>9s} {'reconfigs':>9s}")
     for row in res.job_rows():
@@ -94,9 +100,18 @@ def main():
                     choices=["contiguous", "fragmented"])
     ap.add_argument("--mean-gap", type=float, default=2.0,
                     help="mean inter-arrival gap (simulated seconds)")
+    ap.add_argument("--backend", default="crossbar_ocs",
+                    choices=["crossbar_ocs", "ocs_array"],
+                    help="SwitchBackend behind the rails (DESIGN.md §10); "
+                         "ocs_array = ACOS-style array of small switches")
+    ap.add_argument("--radix", type=int, default=None,
+                    help="ocs_array sub-switch radix (ports per element; "
+                         "a job's circuits must fit one sub-switch)")
     args = ap.parse_args()
     if args.fault and args.engine == "analytic":
         ap.error("--fault needs the event engine (real control plane)")
+    if args.backend == "ocs_array" and args.radix is None:
+        ap.error("--backend ocs_array needs --radix")
     if args.jobs:
         return run_cluster(args)
 
@@ -114,9 +129,16 @@ def main():
     ocs_fail = (lambda attempt: True) if args.fault else None
     last = None
     for tech, lat in OCS_TECH.items():
-        p = simulate(wl, SimParams(mode="opus_prov", ocs_latency=lat,
-                                   n_rails=args.rails),
-                     engine=args.engine, ocs_fail=ocs_fail)
+        try:
+            p = simulate(wl, SimParams(mode="opus_prov", ocs_latency=lat,
+                                       n_rails=args.rails,
+                                       backend=args.backend,
+                                       radix=args.radix),
+                         engine=args.engine, ocs_fail=ocs_fail)
+        except CrossSubSwitchError as e:
+            sys.exit(f"error: {e}\n(an ocs_array job must fit one "
+                     f"sub-switch: raise --radix to >= {dp * args.pp} "
+                     "or shrink the job)")
         print(f"  {tech:24s} ({lat*1e3:5.0f} ms): "
               f"{100*(p.step_time/nat-1):6.2f}% overhead")
         last = p
@@ -129,7 +151,11 @@ def main():
               + (", GIANT-RING FALLBACK active"
                  if last.telemetry["fallback_giant_ring"] else ""))
     part = "eps_800g_cpo" if args.gpu == "gb200" else "eps_400g"
-    c = compare(args.gpus, GPUS[args.gpu].domain, part)
+    # bill the SAME FabricSpec the sweep above simulated (DESIGN.md §10)
+    spec = replace(SimParams(mode="opus_prov", backend=args.backend,
+                             radix=args.radix).fabric_spec(),
+                   ports_per_link=OCS_PORTS_PER_LINK.get(part, 1))
+    c = compare(args.gpus, GPUS[args.gpu].domain, part, ocs=spec)
     print(f"  network bill: {c['cost_ratio']:.2f}x cost and "
           f"{c['power_ratio']:.1f}x power in favour of photonic rails")
     print("  -> the paper's tradeoff: a few percent slower, an order of "

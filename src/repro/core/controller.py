@@ -43,9 +43,15 @@ class Controller:
 
     def __init__(self, job_id: str, n_ways: int,
                  orchestrators: Sequence[RailOrchestrator],
-                 timeout: float = 1.0, max_retries: int = 3):
+                 timeout: float = 1.0, max_retries: int = 3,
+                 static: bool = False):
         self.job_id = job_id
         self.n_ways = n_ways
+        # static-fabric jobs (native/oneshot through the plane, DESIGN.md
+        # §10) run STATIC shims that never write — a topo_write reaching
+        # this controller anyway is a control-plane bug, not a request
+        # the fabric could ever honour, and is rejected loudly.
+        self.static = static
         self.orchestrators = list(orchestrators)
         self.groups: Dict[str, GroupState] = {}
         self.topo: Dict[int, TopoId] = {
@@ -83,6 +89,8 @@ class Controller:
         protocol and the two are observationally identical at the
         controller (same barrier/dispatch sequence, same timestamps).
         """
+        assert not self.static, \
+            "topo_write on a static-fabric job (shims must run STATIC)"
         g = self.groups[group_id]
         if idx != g.idx:
             # stale write (rank ahead/behind): queue semantics collapse to

@@ -34,6 +34,14 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+# Canonical re-export (DESIGN.md §10): the declarative switch-hardware
+# spec and the SwitchBackend family live in the jax-free
+# ``repro.core.fabricspec`` (the simulator/benchmarks must never pull in
+# jax); datapath users spell it ``repro.core.fabric.FabricSpec``.
+from repro.core.fabricspec import (  # noqa: F401
+    CrossbarOCS, FabricSpec, OCSArray, PacketSwitch, PatchPanel,
+    SwitchBackend)
+
 
 def ring_perm(n: int, shift: int = 1):
     return [(i, (i + shift) % n) for i in range(n)]

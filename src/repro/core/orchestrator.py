@@ -20,58 +20,15 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Tuple
 
+from repro.core.fabricspec import CrossbarOCS, SwitchBackend
 from repro.core.topo import (JobPlacement, SubMapping, TopoId, affected_ways,
                              build_submapping, ring_pairs)
 
-
-class OCSDriver:
-    """Vendor-neutral OCS interface (TL1/SCPI/NETCONF in hardware; here an
-    in-memory switch model with non-blocking reconfiguration semantics)."""
-
-    def __init__(self, n_ports: int, reconfig_latency: float = 0.0):
-        self.n_ports = n_ports
-        self.reconfig_latency = reconfig_latency
-        self.circuits: Dict[int, int] = {}       # src -> dst
-        self.n_program_calls = 0
-        self.n_ports_programmed = 0
-        self.busy_until = 0.0
-        # reconfiguration serialization: programs that found the switch
-        # mid-reconfiguration and had to queue behind it.  The switch has
-        # no tenant concept, so this counts queueing behind ANY in-flight
-        # program — another job's (cluster contention) or this job's own
-        # back-to-back dispatches — a property of the switch, not of who
-        # asked.
-        self.n_queued_programs = 0
-        self.queue_wait_s = 0.0
-
-    def program(self, disconnect: List[int], connect: List[Tuple[int, int]],
-                now: float = 0.0) -> float:
-        """Apply a partial reprogram; returns completion time.
-
-        Non-blocking: ports not named are untouched.  Raises on conflicts
-        (connecting a port already in another circuit) — G-invariant
-        violations surface as errors, not silent corruption.
-        """
-        for p in disconnect:
-            self.circuits.pop(p, None)
-        for a, b in connect:
-            if a in self.circuits:
-                raise ValueError(f"port {a} already connected")
-            if not (0 <= a < self.n_ports and 0 <= b < self.n_ports):
-                raise ValueError(f"port out of range: {(a, b)}")
-            self.circuits[a] = b
-        self.n_program_calls += 1
-        self.n_ports_programmed += len(disconnect) + len(connect)
-        wait = max(0.0, self.busy_until - now)
-        if wait > 0.0:
-            self.n_queued_programs += 1
-            self.queue_wait_s += wait
-        done = max(now, self.busy_until) + self.reconfig_latency
-        self.busy_until = done
-        return done
-
-    def connected(self, a: int) -> Optional[int]:
-        return self.circuits.get(a)
+# Back-compat name: the in-memory OCS driver grew into the SwitchBackend
+# family (DESIGN.md §10) and its crossbar incarnation now lives in
+# repro.core.fabricspec as CrossbarOCS — bit-identical behaviour, same
+# constructor.  Existing callers keep importing OCSDriver from here.
+OCSDriver = CrossbarOCS
 
 
 @dataclass
@@ -89,7 +46,7 @@ class JobTopoState:
 class RailOrchestrator:
     """One per rail: owns the rail's OCS and all jobs' sub-mappings."""
 
-    def __init__(self, rail_id: int, ocs: OCSDriver):
+    def __init__(self, rail_id: int, ocs: SwitchBackend):
         self.rail_id = rail_id
         self.ocs = ocs
         self.jobs: Dict[str, JobTopoState] = {}
@@ -123,6 +80,12 @@ class RailOrchestrator:
         self.jobs[placement.job_id] = st
         for p in placement.all_ports:
             self.port_owner[p] = placement.job_id
+        if not self.ocs.programmable:
+            # always-connected fabric (PacketSwitch): port ownership is
+            # still tracked (admission/isolation are real on shared
+            # rails) but there are no circuits to program, and telemetry
+            # honestly reports zero programming
+            return now
         pairs = [p for sm in st.submaps.values() for p in sm.pairs]
         self._programmed(st, len(pairs))
         return self.ocs.program([], pairs, now)
@@ -133,7 +96,8 @@ class RailOrchestrator:
         self._assert_owned(job_id, ports)
         for p in ports:
             del self.port_owner[p]
-        self.ocs.program(ports, [], now)
+        if self.ocs.programmable:
+            self.ocs.program(ports, [], now)
 
     # -- reconfiguration dispatch (paper Fig 8) -----------------------------
     def apply(self, job_id: str, new_topo: TopoId, now: float = 0.0) -> float:
@@ -144,6 +108,8 @@ class RailOrchestrator:
         this is the O1 suppression observable at the orchestrator.
         """
         st = self.jobs[job_id]
+        assert self.ocs.programmable, \
+            "reconfiguration dispatch on a circuit-free fabric"
         ways = affected_ways(st.topo, new_topo)
         if not ways:
             return now
@@ -188,14 +154,18 @@ class RailOrchestrator:
         on the fault path too: the ring is built strictly from the job's
         own ports and never touches another tenant's circuits."""
         st = self.jobs[job_id]
+        assert self.ocs.programmable, \
+            "giant-ring fallback on a circuit-free fabric"
         ports = sorted(st.placement.all_ports)
         self._assert_owned(job_id, ports)
         pairs = list(ring_pairs(ports))
         self.n_reconfig_events += 1
         st.n_reconfig_events += 1
         self._programmed(st, len(ports) + len(pairs))
-        self.ocs.program(ports, pairs, now)
-        return self.ocs.busy_until
+        # return program()'s own completion time: on an OCSArray,
+        # ocs.busy_until is the max over ALL sub-switches and would leak
+        # another tenant's busy clock into this job's ack time
+        return self.ocs.program(ports, pairs, now)
 
     def job_stats(self, job_id: str) -> Dict[str, int]:
         """Per-job programming counters (shared-rail telemetry source)."""

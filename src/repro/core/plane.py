@@ -3,10 +3,13 @@
 ``ControlPlane`` wires the REAL control-plane state machines — one
 :class:`~repro.core.shim.Shim` per scale-out rank, the per-job
 :class:`~repro.core.controller.Controller`, one
-:class:`~repro.core.orchestrator.RailOrchestrator` +
-:class:`~repro.core.orchestrator.OCSDriver` per rail — from a single
-:class:`~repro.core.phases.JobConfig`, and exposes the narrow event API the
-simulator (and any future scenario driver) programs against:
+:class:`~repro.core.orchestrator.RailOrchestrator` driving a
+:class:`~repro.core.fabricspec.SwitchBackend` per rail (which backend —
+crossbar OCS, ACOS-style OCS array, patch panel, packet switch — comes
+from the job's :class:`~repro.core.fabricspec.FabricSpec`, DESIGN.md
+§10) — from a single :class:`~repro.core.phases.JobConfig`, and exposes
+the narrow event API the simulator (and any future scenario driver)
+programs against:
 
     plane = ControlPlane(job, n_rails=1, ocs_latency=0.1)
     plane.profile(ops)                       # §4.2 profiling iterations
@@ -44,9 +47,10 @@ from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.controller import Controller, GroupState, WriteResult
-from repro.core.orchestrator import OCSDriver, RailOrchestrator
+from repro.core.fabricspec import CrossSubSwitchError, FabricSpec, OCSArray
+from repro.core.orchestrator import RailOrchestrator
 from repro.core.phases import SYM_DIGITS, CommOp, JobConfig
-from repro.core.shim import DEFAULT, Action, Shim
+from repro.core.shim import DEFAULT, STATIC, Action, Shim
 from repro.core.topo import PP_DIGIT, JobPlacement, TopoId
 
 
@@ -106,11 +110,20 @@ class ControlPlane:
     Scenario knobs (multi-job sharing, fault injection, OCS-latency
     sweeps) are constructor parameters, not new code paths:
 
-      n_rails       rails (OCS + orchestrator pairs) the job spans
-      ocs_latency   per-reconfiguration OCS switching time (seconds)
-      nic_linkup    additive NIC firmware link-up penalty (§5.1)
-      mode          shim mode: ``DEFAULT`` (on-demand, Alg 1) or
-                    ``PROVISIONING`` (speculative, Alg 2 / O2)
+      spec          FabricSpec (DESIGN.md §10): switch technology +
+                    radix + latency model behind every rail.  Default:
+                    a CrossbarOCS spec built from the legacy knobs
+                    below (bit-identical to the pre-spec plane).
+      n_rails       rails (switch + orchestrator pairs) the job spans
+                    (ignored when ``spec`` is given — the spec carries it)
+      ocs_latency   per-reconfiguration OCS switching time (seconds;
+                    ignored when ``spec`` is given)
+      nic_linkup    additive NIC firmware link-up penalty (§5.1;
+                    ignored when ``spec`` is given)
+      mode          shim mode: ``DEFAULT`` (on-demand, Alg 1),
+                    ``PROVISIONING`` (speculative, Alg 2 / O2) or
+                    ``STATIC`` (static fabric: shims classify and route
+                    but never write — native/oneshot through the plane)
       ocs_fail      fault injector ``(attempt) -> bool``; persistent
                     failure triggers the §4.2 giant-ring fallback
       collapse      rank-equivalence-class mode (DESIGN.md §8): one
@@ -137,7 +150,8 @@ class ControlPlane:
                  collapse: bool = False,
                  orchestrators: Optional[Sequence[RailOrchestrator]] = None,
                  ports: Optional[Sequence[int]] = None,
-                 now: float = 0.0):
+                 now: float = 0.0,
+                 spec: Optional[FabricSpec] = None):
         self.job = job
         self.job_id = job_id
         self.placement = build_placement(job, job_id, ports=ports)
@@ -147,27 +161,39 @@ class ControlPlane:
         self.listeners = list(listeners)
         self.collapse = collapse
         self.shared_rails = orchestrators is not None
+        if spec is None:
+            # legacy knobs: a private-rail crossbar, exactly as before
+            spec = FabricSpec(n_rails=n_rails, reconfig_latency=ocs_latency,
+                              nic_linkup=nic_linkup)
+        self.spec = spec
+        self.static = mode == STATIC
+        # non-static shims WILL dispatch reconfigurations eventually —
+        # the fabric must be able to honour them (DESIGN.md §10 matrix)
+        assert spec.reconfigurable or self.static, \
+            f"shim mode {mode!r} needs a reconfigurable fabric, " \
+            f"not {spec.technology}"
 
         initial = TopoId.uniform(self.n_ways, 1)
         if orchestrators is not None:
             self.orchestrators = list(orchestrators)
             assert self.orchestrators, "a job spans at least one rail"
             for orch in self.orchestrators:
+                self._check_subswitch_fit(orch.ocs)
                 orch.register_job(self.placement, initial, now)
         else:
-            assert n_rails >= 1, "a job spans at least one rail"
             assert ports is None, \
                 "port grants only make sense on shared rails"
             self.orchestrators = []
-            for r in range(n_rails):
-                ocs = OCSDriver(n_ports=self.n_ranks,
-                                reconfig_latency=ocs_latency + nic_linkup)
-                orch = RailOrchestrator(r, ocs)
+            for r in range(spec.n_rails):
+                backend = spec.make_backend(self.n_ranks)
+                self._check_subswitch_fit(backend)
+                orch = RailOrchestrator(r, backend)
                 orch.register_job(self.placement, initial)
                 self.orchestrators.append(orch)
         self.controller = Controller(job_id, self.n_ways,
                                      self.orchestrators, timeout=timeout,
-                                     max_retries=max_retries)
+                                     max_retries=max_retries,
+                                     static=self.static)
         # rank-equivalence classes: (representative rank, cardinality).
         # Derivation rule (DESIGN.md §8): ranks sharing a pipeline way
         # occupy the same group-role in every CTR group the SPMD stream
@@ -200,6 +226,23 @@ class ControlPlane:
         self._sched: Optional[List[Tuple[str, int, tuple,
                                          Tuple[bool, ...]]]] = None
         self._cursor = 0
+
+    def _check_subswitch_fit(self, backend) -> None:
+        """OCSArray placement rule (DESIGN.md §10): a job's circuits are
+        only ever wired among its own ports, so requiring the whole port
+        set to sit inside ONE sub-switch guarantees every topology the
+        plane can dispatch — including the §4.2 giant-ring fallback — is
+        physically wireable.  Checked at registration so a spanning
+        placement fails immediately, not at the first mid-run dispatch."""
+        if not isinstance(backend, OCSArray):
+            return
+        if not backend.fits(self.placement.all_ports):
+            lo = min(self.placement.all_ports)
+            hi = max(self.placement.all_ports)
+            raise CrossSubSwitchError(
+                f"job {self.job_id!r} spans OCSArray sub-switch "
+                f"boundaries (ports {lo}-{hi}, radix {backend.radix}); "
+                "the placement must fit one sub-switch")
 
     # -- profiling (§4.2) ----------------------------------------------------
     def profile(self, ops: Sequence[CommOp]) -> None:

@@ -22,6 +22,12 @@ from repro.core.phases import CommOp, build_phase_table
 
 DEFAULT = "default"
 PROVISIONING = "provisioning"
+# static-fabric mode (DESIGN.md §10): the shim still intercepts and
+# classifies every collective and walks the phase table, but the fabric
+# under it cannot move (patch panel) or never needs to (packet switch) —
+# it never takes the topology lock and never issues a topo_write.  This
+# is how native/oneshot run through the REAL control plane.
+STATIC = "static"
 
 
 @dataclass(frozen=True)
@@ -56,7 +62,7 @@ class Shim:
     """Per-rank control logic."""
 
     def __init__(self, rank: int, mode: str = DEFAULT):
-        assert mode in (DEFAULT, PROVISIONING)
+        assert mode in (DEFAULT, PROVISIONING, STATIC)
         self.rank = rank
         self.mode = mode
         self.phase_table: List[PhaseTableEntry] = []
@@ -129,6 +135,12 @@ class Shim:
             acts.append(Action("select_network",
                                network="scale_up" if op.scale == "scale_up"
                                else "frontend"))
+            return acts
+        if self.mode == STATIC:
+            # static fabric: nothing to write, nothing to lock — the op
+            # just gets routed onto the rail network
+            self.idx += 1
+            acts.append(Action("select_network", network="rail"))
             return acts
         if self.topology_busy:
             self.n_waits += 1

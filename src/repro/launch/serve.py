@@ -1,7 +1,11 @@
 """Serving driver: batched prefill + decode on the photonic mesh.
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi_9b --smoke \
-        --mesh 4x2 --batch 8 --prompt-len 12 --gen 20
+        --mesh 4x2 --batch 8 --prompt-len 12 --gen 20 --plane-report
+
+``--plane-report`` replays the job's schedule through the real photonic
+control plane after serving (same mesh -> JobConfig mapping as the train
+driver, via ``opus_sim.mesh_plane_profile``) — serve/train parity.
 """
 from __future__ import annotations
 
@@ -29,6 +33,12 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--context-shard", action="store_true")
+    ap.add_argument("--plane-report", action="store_true",
+                    help="after serving, replay this job's schedule "
+                         "through the real photonic control plane "
+                         "(repro.core.plane) and print its telemetry")
+    ap.add_argument("--ocs-latency", type=float, default=0.05,
+                    help="OCS reconfiguration latency for --plane-report")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -64,6 +74,12 @@ def main(argv=None):
         print(f"served {args.batch} seqs x {cap} steps in {dt:.2f}s "
               f"({toks/dt:.1f} tok/s aggregate)")
         print("sample continuation:", [int(x[0, 0]) for x in out[:10]])
+    if args.plane_report:
+        # serve/train parity: the same mesh -> control-plane mapping the
+        # train driver prints (launch.train.plane_report), with the
+        # decode capacity standing in for the training sequence length
+        from repro.launch.train import plane_report
+        plane_report(cfg, mesh, args.batch, cap, args.ocs_latency)
 
 
 if __name__ == "__main__":

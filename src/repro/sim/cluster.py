@@ -19,9 +19,9 @@ event engine to that setting:
   (head-of-line: admission order is preserved, never reordered);
 * all jobs advance on ONE merged event timeline: the scheduler always
   steps the job with the smallest engine clock, so cross-job OCS
-  serialization (``OCSDriver.busy_until``) resolves in causal order and
-  reconfiguration contention shows up as queued programs on the shared
-  switches.
+  serialization (``SwitchBackend.busy_until``; per sub-switch on an
+  ``ocs_array`` rail) resolves in causal order and reconfiguration
+  contention shows up as queued programs on the shared switches.
 
 Isolation invariant: one job's ``program()`` never touches another
 job's ports — enforced by the orchestrator's port-ownership assertions
@@ -34,15 +34,15 @@ simulator.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core import phases as ph
-from repro.core.orchestrator import (OCSDriver, PortAllocator,
-                                     RailOrchestrator)
+from repro.core.fabricspec import FabricSpec, OCSArray
+from repro.core.orchestrator import PortAllocator, RailOrchestrator
 from repro.core.plane import ControlPlane
-from repro.core.shim import DEFAULT, PROVISIONING
-from repro.sim.opus_sim import EventEngine, SimParams, SimResult, simulate
+from repro.sim.opus_sim import (SHIM_MODE, EventEngine, SimParams, SimResult,
+                                simulate)
 from repro.sim.workload import GPUS, build
 
 
@@ -65,14 +65,28 @@ def exp_trace(n: int, mean_gap: float, seed: int = 1) -> List[float]:
 
 @dataclass(frozen=True)
 class ClusterParams:
-    """Shared-fabric shape: one OCS port space replicated per rail."""
+    """Shared-fabric shape: one switch port space replicated per rail.
 
-    n_ports: int                  # per-rail OCS port space (all tenants)
+    ``backend``/``radix`` select the shared rails' SwitchBackend
+    (DESIGN.md §10): the default crossbar, or an ACOS-style ``ocs_array``
+    whose radix-limited sub-switches constrain admission (a tenant's
+    circuits must fit inside one sub-switch) but reconfigure in parallel.
+    ``fabric_spec()`` is the declarative spec — the same object the
+    Fig-14 bill in :meth:`ClusterResult.summary` is derived from."""
+
+    n_ports: int                  # per-rail switch port space (all tenants)
     n_rails: int = 1
     policy: str = "contiguous"    # PortAllocator policy
     ocs_latency: float = 0.01
     nic_linkup: float = 0.0
     gpu: str = "h200"
+    backend: str = "crossbar_ocs"
+    radix: Optional[int] = None   # ocs_array sub-switch radix
+
+    def fabric_spec(self) -> FabricSpec:
+        return FabricSpec(technology=self.backend, n_rails=self.n_rails,
+                          reconfig_latency=self.ocs_latency,
+                          nic_linkup=self.nic_linkup, radix=self.radix)
 
 
 @dataclass(frozen=True)
@@ -82,15 +96,16 @@ class ClusterJobSpec:
     name: str
     job: ph.JobConfig
     arrival: float = 0.0
-    mode: str = "opus_prov"       # opus | opus_prov
+    mode: str = "opus_prov"       # opus | opus_prov | oneshot
     iterations: int = 2           # warmup + measured, like the engine
 
     def __post_init__(self):
-        # native/oneshot have no control plane to share — a cluster
-        # tenant must drive the real machinery (simulate() routes those
-        # modes to the analytic path; silently running them through an
-        # opus plane would fake their semantics)
-        assert self.mode in ("opus", "opus_prov"), self.mode
+        # every tenant drives the real control plane on the shared rails.
+        # oneshot tenants run STATIC shims (circuits set once at
+        # admission, never reconfigured — zero contention contributed);
+        # native is excluded because its always-connected packet fabric
+        # is not a circuit switch a photonic rail cluster could share.
+        assert self.mode in ("opus", "opus_prov", "oneshot"), self.mode
         assert self.arrival >= 0.0, self.arrival
 
     @property
@@ -125,9 +140,9 @@ class ClusterSim:
     def __init__(self, params: ClusterParams):
         self.params = params
         self.allocator = PortAllocator(params.n_ports, params.policy)
-        lat = params.ocs_latency + params.nic_linkup
-        self.rails = [RailOrchestrator(r, OCSDriver(params.n_ports,
-                                                    reconfig_latency=lat))
+        self.spec = params.fabric_spec()
+        self.rails = [RailOrchestrator(r, self.spec.make_backend(
+                          params.n_ports))
                       for r in range(params.n_rails)]
         self.records: List[JobRecord] = []
         self.events: List[Dict[str, object]] = []
@@ -161,9 +176,15 @@ class ClusterSim:
         while pending or waiting or active:
             arrival = pending[0].spec.arrival if pending else math.inf
             clock = next_active()[1].t if active else math.inf
-            if arrival <= clock:
+            if pending and arrival <= clock:
                 rec = pending.pop(0)
-                if rec.spec.n_ranks > self.params.n_ports:
+                # on an ocs_array rail a tenant's circuits must fit one
+                # sub-switch (DESIGN.md §10), so the hard capacity is the
+                # radix, not the rail
+                cap = self.params.n_ports
+                if self.params.backend == "ocs_array" and self.params.radix:
+                    cap = min(cap, self.params.radix)
+                if rec.spec.n_ranks > cap:
                     rec.status = "rejected"     # can NEVER fit
                     self._sample(rec.spec.arrival, "reject", rec)
                 elif waiting or not self._admit(rec, rec.spec.arrival):
@@ -174,10 +195,24 @@ class ClusterSim:
                     active.append(self._start(rec, seq))
                     seq += 1
                 continue
-            # a feasible job queues only while others hold its ports, and
-            # every departure drains the queue head while it fits — so a
-            # non-empty queue implies a running job to advance
-            assert active, "FIFO queue non-empty with an idle cluster"
+            if not active:
+                # the queue head does not fit an otherwise IDLE cluster:
+                # on a crossbar that is impossible (a feasible job queues
+                # only while others hold its ports), but an ocs_array
+                # grant can straddle a sub-switch boundary under the
+                # fragmented policy with no tenant left to depart —
+                # reject it visibly rather than deadlock, then re-try
+                # the rest of the queue on the empty rail
+                now = max((r.finished for r in self.records
+                           if r.finished is not None), default=0.0)
+                rec = waiting.pop(0)
+                rec.status = "rejected"
+                self._sample(max(now, rec.spec.arrival), "reject", rec)
+                while waiting and self._admit(
+                        waiting[0], max(now, waiting[0].spec.arrival)):
+                    active.append(self._start(waiting.pop(0), seq))
+                    seq += 1
+                continue
             entry = next_active()
             rec, engine, gen, _ = entry
             try:
@@ -197,8 +232,16 @@ class ClusterSim:
         grant = self.allocator.allocate(rec.spec.name, rec.spec.n_ranks)
         if grant is None:
             return False
-        mode = PROVISIONING if rec.spec.mode == "opus_prov" else DEFAULT
-        plane = ControlPlane(rec.spec.job, mode=mode, job_id=rec.spec.name,
+        ocs = self.rails[0].ocs
+        if isinstance(ocs, OCSArray) and not ocs.fits(grant):
+            # ACOS admission effect (DESIGN.md §10): the grant straddles
+            # a sub-switch boundary, so the tenant's circuits cannot be
+            # wired — hand the ports back and let the job wait for an
+            # aligned slot (the fragmentation the big crossbar hides)
+            self.allocator.release(rec.spec.name)
+            return False
+        plane = ControlPlane(rec.spec.job, mode=SHIM_MODE[rec.spec.mode],
+                             job_id=rec.spec.name, spec=self.spec,
                              ocs_fail=rec.ocs_fail, collapse=True,
                              orchestrators=self.rails, ports=grant, now=now)
         rec.ports = grant
@@ -215,7 +258,9 @@ class ClusterSim:
             wl, SimParams(mode=rec.spec.mode,
                           ocs_latency=self.params.ocs_latency,
                           nic_linkup=self.params.nic_linkup,
-                          n_rails=self.params.n_rails),
+                          n_rails=self.params.n_rails,
+                          backend=self.params.backend,
+                          radix=self.params.radix),
             plane=rec.plane, start=rec.admitted,
             iterations=rec.spec.iterations)
         return (rec, engine, engine.events(), seq)
@@ -343,14 +388,18 @@ class ClusterResult:
                                           if overheads else 0.0)
         out["max_overhead_vs_native"] = max(overheads, default=0.0)
         # aggregate network bill at the cluster's peak occupancy (Fig 14
-        # model; per-rail OCS vs electrical packet switch)
+        # model): the photonic side is billed from the SAME FabricSpec
+        # the shared rails were simulated on (DESIGN.md §10)
         if peak_gpus > 0:
-            from repro.sim.costmodel import compare
+            from repro.sim.costmodel import OCS_PORTS_PER_LINK, compare
             part = "eps_800g_cpo" if self.params.gpu == "gb200" \
                 else "eps_400g"
-            c = compare(peak_gpus, gpu.domain, part)
+            spec = replace(self.params.fabric_spec(),
+                           ports_per_link=OCS_PORTS_PER_LINK.get(part, 1))
+            c = compare(peak_gpus, gpu.domain, part, ocs=spec)
             out["network_bill"] = {
                 "eps_part": part,
+                "backend": spec.technology,
                 "cost_ratio": c["cost_ratio"],
                 "power_ratio": c["power_ratio"],
             }

@@ -21,6 +21,9 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.fabricspec import CrossbarOCS
+from repro.core.topo import ring_pairs
+
 
 @dataclass
 class NetConfig:
@@ -31,7 +34,16 @@ class NetConfig:
 
 
 class ReconfigurableBackend:
-    """Time-stepped fabric: one active bandwidth matrix at a time."""
+    """Time-stepped fabric: one active bandwidth matrix at a time.
+
+    Reconfiguration *timing* (busy-until semantics) delegates to an
+    internal :class:`~repro.core.fabricspec.CrossbarOCS` — the SAME
+    switch model the control plane's orchestrators drive — so the
+    ``PlaneBackendBridge`` can never drift from the real OCS driver's
+    completion-time arithmetic.  This class adds what the switch model
+    does not have: G1/G2 *rejection* semantics (the switch queues;
+    the analytical backend errors, per the paper's correctness rules).
+    """
 
     def __init__(self, cfg: NetConfig,
                  candidates: Dict[int, np.ndarray]):
@@ -45,8 +57,15 @@ class ReconfigurableBackend:
         self.inflight: int = 0
         self.reconfig_until: float = -1.0
         self.queue: List[Tuple[float, float]] = []  # (arrival, duration)
-        self.n_reconfigs = 0
+        self._switch = CrossbarOCS(n_ports=cfg.n_ranks,
+                                   reconfig_latency=cfg.reconfig_latency)
         self.n_rejections = 0
+
+    @property
+    def n_reconfigs(self) -> int:
+        """Accepted reconfigurations — counted by the shared switch
+        model (one program() per accepted reconfigure)."""
+        return self._switch.n_program_calls
 
     def register_candidate(self, topo_id: int, matrix: np.ndarray):
         """Add (or replace) a circuit configuration at runtime — used by
@@ -69,11 +88,15 @@ class ReconfigurableBackend:
                 "reconfigure while another reconfiguration pending")
         if topo_id == self.active_id:
             return now  # no-op (O1 suppression downstream)
-        # drain is implicit: inflight == 0
+        # drain is implicit: inflight == 0.  Completion time comes from
+        # the real switch model's program() (busy-until + latency); the
+        # rejection checks above guarantee the switch is idle, so this
+        # never queues — asserted via the switch's own counter.
         self.active_id = topo_id
         self.active = self.candidates[topo_id]
-        self.reconfig_until = now + self.cfg.reconfig_latency
-        self.n_reconfigs += 1
+        self.reconfig_until = self._switch.program([], [], now)
+        assert self._switch.n_queued_programs == 0, \
+            "rejection semantics should have caught a busy switch"
         return self.reconfig_until
 
     # -- traffic ------------------------------------------------------------
@@ -120,14 +143,13 @@ class ReconfigurableBackend:
 
 
 def ring_matrix(n: int, ranks: List[int], gbps: float) -> np.ndarray:
-    """Bandwidth matrix wiring `ranks` into a bidirectional ring."""
-    m = np.zeros((n, n))
-    k = len(ranks)
-    for i in range(k):
-        a, b = ranks[i], ranks[(i + 1) % k]
-        m[a, b] = gbps
-        m[b, a] = gbps
-    return m
+    """Bandwidth matrix wiring `ranks` into a bidirectional ring.
+
+    Ring enumeration delegates to ``core.topo.ring_pairs`` — the same
+    builder the orchestrators program sub-mappings from — so the
+    analytical matrices cannot drift from the circuits the control plane
+    actually dispatches (a single port is no ring: no self-loop)."""
+    return pairs_matrix(n, list(ring_pairs(ranks)), gbps)
 
 
 def pairs_matrix(n: int, pairs: List[Tuple[int, int]],

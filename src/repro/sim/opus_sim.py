@@ -6,32 +6,38 @@ the model's data dependencies (paper §3: phases never overlap on a rail),
 so step time = sum of compute segments, collective times at the bandwidth
 each mode gives the active phase, and exposed reconfiguration/control time.
 
-Modes
-  native    electrical packet switch: every link always up, full NIC
-            bandwidth per collective, zero reconfig/control cost.
-  oneshot   circuits set once before the job: NIC bandwidth statically
-            split across scale-out dims (optimal sqrt-allocation), no
-            reconfigs.  [paper baseline (2), following ACTINA]
+Modes — each runs through the real ControlPlane on its natural
+SwitchBackend (DESIGN.md §10; override via SimParams.backend/fabric):
+  native    electrical PacketSwitch: every link always up, full NIC
+            bandwidth per collective, zero reconfig/control cost
+            (STATIC shims: classify + route, never write).
+  oneshot   circuits patched once at job registration (PatchPanel): NIC
+            bandwidth statically split across scale-out dims (optimal
+            sqrt-allocation), no reconfigs.  [paper baseline (2),
+            following ACTINA]
   opus      in-job reconfiguration at phase boundaries, on-demand: the OCS
             latency + controller barrier are exposed on the critical path
-            at every reconfiguration (Alg 1).
+            at every reconfiguration (Alg 1).  CrossbarOCS by default;
+            OCSArray for ACOS-style arrays of small sub-switches.
   opus_prov speculative provisioning (Alg 2): reconfiguration starts right
             after the previous phase's last op; exposed delay is
             max(0, T_reconfig - T_window) (§4.2) plus the small async
             control residue.
 
-Engines (opus / opus_prov only; native / oneshot have no control plane)
+Engines
   event     DEFAULT.  Replays the timed workload through the REAL control
             plane (``repro.core.plane.ControlPlane``): Shims emit Action
             records, topo_writes run against the real Controller /
-            RailOrchestrator / OCSDriver, and every reconfiguration count
-            or exposure second is derived from their telemetry.  Two
-            iterations are replayed — the first warms the topology into
-            its cyclic steady state (the §4.2 profiling iterations), the
-            second is measured.  The plane runs in rank-equivalence-class
-            mode (DESIGN.md §8): one representative Shim per pipeline
-            way, weighted barriers, one batched plane call per op — which
-            is what makes the 2048-GPU paper sweeps tractable.
+            RailOrchestrator / SwitchBackend, and every reconfiguration
+            count or exposure second is derived from their telemetry.
+            For the reconfigurable modes two iterations are replayed —
+            the first warms the topology into its cyclic steady state
+            (the §4.2 profiling iterations), the second is measured;
+            static-fabric modes (native/oneshot) have no topology state
+            to warm and run one.  The plane runs in rank-equivalence-
+            class mode (DESIGN.md §8): one representative Shim per
+            pipeline way, weighted barriers, one batched plane call per
+            op — which is what makes the 2048-GPU paper sweeps tractable.
   event_full  The same event engine on an UNCOLLAPSED plane (one Shim and
             one weighted-1 barrier write per rank).  O(ops x ranks)
             Python dispatch; kept as the ground truth the collapsed plane
@@ -52,8 +58,9 @@ from functools import lru_cache
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core import phases as ph
+from repro.core.fabricspec import FabricSpec
 from repro.core.plane import ControlPlane
-from repro.core.shim import DEFAULT, PROVISIONING
+from repro.core.shim import DEFAULT, PROVISIONING, STATIC
 from repro.core.windows import TimedOp, Window, windows_of
 from repro.sim.workload import TimedWorkload
 
@@ -68,6 +75,14 @@ PP_OP_CTRL = 0.4e-3
 
 @dataclass(frozen=True)
 class SimParams:
+    """Simulation knobs.  ``mode`` is now a thin back-compat constructor
+    over :class:`~repro.core.fabricspec.FabricSpec`: the mode string plus
+    the legacy latency knobs resolve (via :meth:`fabric_spec`) to the
+    declarative switch-hardware spec every layer consumes — the same
+    object ``sim.costmodel.rail_fabric`` bills (one spec, both numbers).
+    ``backend``/``radix`` override the mode's natural technology;
+    ``fabric`` supplies a complete spec directly."""
+
     mode: str                     # native | oneshot | opus | opus_prov
     ocs_latency: float = 0.0      # seconds per OCS reconfiguration
     # blocking topo_write barrier (default mode).  None -> scale-dependent:
@@ -77,7 +92,25 @@ class SimParams:
     ctrl_sync: Optional[float] = None
     ctrl_async: Optional[float] = None  # provisioning residue (~sync/8)
     nic_linkup: float = 0.0       # §5.1 firmware link-up penalty knob
-    n_rails: int = 1              # rails (OCS instances) the job spans
+    n_rails: int = 1              # rails (switch instances) the job spans
+    backend: Optional[str] = None  # SwitchBackend technology override
+    radix: Optional[int] = None   # OCSArray sub-switch radix
+    fabric: Optional[FabricSpec] = None   # full spec override
+
+    def fabric_spec(self) -> FabricSpec:
+        """The declarative fabric behind these params (validated against
+        the mode x backend matrix)."""
+        if self.fabric is not None:
+            return self.fabric.validate_mode(self.mode)
+        return FabricSpec.for_mode(
+            self.mode, ocs_latency=self.ocs_latency,
+            nic_linkup=self.nic_linkup, n_rails=self.n_rails,
+            technology=self.backend, radix=self.radix)
+
+    @property
+    def static_fabric(self) -> bool:
+        """Modes whose circuits never change during the job."""
+        return self.mode in ("native", "oneshot")
 
     def resolved(self, n_ranks: int) -> Tuple[float, float]:
         import math
@@ -141,18 +174,17 @@ def simulate(wl: TimedWorkload, params: SimParams, *,
              ocs_fail: Optional[Callable[[int], bool]] = None) -> SimResult:
     """Simulate one steady-state iteration.
 
-    ``engine`` selects the opus-mode implementation: ``"event"`` (default)
-    drives the real control plane collapsed to rank-equivalence classes,
-    ``"event_full"`` the same plane uncollapsed (per-rank, O(ranks)
-    dispatch — the parity ground truth), ``"analytic"`` the closed-form
-    cross-check.  ``ocs_fail`` is the event engines' fault injector
-    (``attempt -> bool``; persistent True triggers the §4.2 giant-ring
-    fallback).
+    ``engine`` selects the implementation: ``"event"`` (default, EVERY
+    mode) drives the real control plane collapsed to rank-equivalence
+    classes on the mode's SwitchBackend, ``"event_full"`` the same plane
+    uncollapsed (per-rank, O(ranks) dispatch — the parity ground truth),
+    ``"analytic"`` the closed-form cross-check.  ``ocs_fail`` is the
+    event engines' fault injector (``attempt -> bool``; persistent True
+    triggers the §4.2 giant-ring fallback).
     """
-    if params.mode in ("native", "oneshot"):
+    if params.static_fabric:
         assert ocs_fail is None, \
-            f"fault injection is meaningless for mode={params.mode!r}"
-        return _simulate_analytic(wl, params)
+            f"mode={params.mode!r} never reconfigures: nothing to fail"
     eng = engine if engine is not None else "event"
     if eng == "analytic":
         assert ocs_fail is None, "fault injection needs the event engine"
@@ -167,15 +199,18 @@ def simulate(wl: TimedWorkload, params: SimParams, *,
 # ---------------------------------------------------------------------------
 
 
+# mode string -> shim algorithm: static fabrics route without writing
+SHIM_MODE = {"native": STATIC, "oneshot": STATIC,
+             "opus": DEFAULT, "opus_prov": PROVISIONING}
+
+
 def build_plane(job: ph.JobConfig, params: SimParams,
                 ocs_fail: Optional[Callable[[int], bool]] = None,
                 listeners=(), collapse: bool = False) -> ControlPlane:
     """The simulator's ControlPlane for (job, params) — exposed so callers
     (benchmarks, launchers, scenario drivers) wire the exact same plane."""
-    mode = PROVISIONING if params.mode == "opus_prov" else DEFAULT
-    return ControlPlane(job, n_rails=params.n_rails,
-                        ocs_latency=params.ocs_latency,
-                        nic_linkup=params.nic_linkup, mode=mode,
+    return ControlPlane(job, spec=params.fabric_spec(),
+                        mode=SHIM_MODE[params.mode],
                         ocs_fail=ocs_fail, listeners=listeners,
                         collapse=collapse)
 
@@ -221,8 +256,15 @@ class EventEngine:
                  ocs_fail: Optional[Callable[[int], bool]] = None,
                  collapse: bool = True,
                  plane: Optional[ControlPlane] = None,
-                 start: float = 0.0, iterations: int = 2):
-        assert iterations >= 2, "warmup + at least one measured iteration"
+                 start: float = 0.0, iterations: Optional[int] = None):
+        if iterations is None:
+            # static fabrics have no topology state to warm into a cyclic
+            # steady state — one iteration IS the steady state (and starts
+            # at the engine clock base, so a zero-start run is float-
+            # identical to the closed-form model)
+            iterations = 1 if params.static_fabric else 2
+        assert iterations >= (1 if params.static_fabric else 2), \
+            "warmup + at least one measured iteration"
         self.wl = wl
         self.params = params
         self.plane = plane if plane is not None else build_plane(
@@ -243,6 +285,10 @@ class EventEngine:
         ctrl_sync, ctrl_async = params.resolved(job.n_gpus)
         _, phase_of = _phase_info(tuple(wl.ops))
         dilation = _giant_ring_dilation(job)  # fault fallback bw factors
+        # oneshot: the patched-once fabric splits NIC bandwidth statically
+        # across the scale-out dims (same sqrt-allocation, and the same
+        # floating-point expression, as the closed-form model)
+        shares = _static_split(job) if params.mode == "oneshot" else {}
 
         t = self.t
         pending_ready: Optional[float] = None   # provisioned reconfig's ACK
@@ -304,6 +350,9 @@ class EventEngine:
 
                 # the collective itself, at the mode's bandwidth
                 bw = gpu.scale_out_gbps
+                if shares:
+                    bw = gpu.scale_out_gbps * max(shares.get(op.dim, 1.0),
+                                                  1e-3)
                 if plane.fallback_giant_ring:
                     # reduced-bandwidth static ring: a k-rank subgroup
                     # ring embedded in the N-port cycle dilutes every link

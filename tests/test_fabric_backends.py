@@ -1,0 +1,439 @@
+"""FabricSpec / SwitchBackend contract (DESIGN.md §10): the mode x
+backend matrix, three-way engine parity on every backend, PatchPanel-
+oneshot bit-equal to the old closed-form path, OCSArray radix rejection
++ cross-sub-switch isolation under faults, and the one-spec-both-numbers
+billing contract with the Fig-14 cost model."""
+import math
+
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.fabricspec import (CrossbarOCS, CrossSubSwitchError,
+                                   FabricSpec, OCSArray, PacketSwitch,
+                                   PatchPanel, StaticFabricError)
+from repro.core.orchestrator import RailOrchestrator
+from repro.core.phases import JobConfig, iteration_schedule
+from repro.core.plane import ControlPlane, build_placement
+from repro.core.shim import DEFAULT
+from repro.core.topo import TopoId
+from repro.sim.costmodel import compare, rail_fabric
+from repro.sim.opus_sim import SimParams, simulate
+from repro.sim.workload import build
+
+CFG = get_config("llama3_8b")
+CONFIG1 = JobConfig(model=CFG, tp=4, fsdp=2, pp=2, global_batch=16,
+                    seq_len=8192)
+CONFIG2 = JobConfig(model=CFG, tp=4, fsdp=8, pp=2, global_batch=64,
+                    seq_len=8192)
+CONFIG3 = JobConfig(model=get_config("deepseek_v3_16b"), tp=4, fsdp=1,
+                    pp=4, global_batch=8, seq_len=2048)
+TESTBED = JobConfig(model=CFG.replace(n_layers=6), tp=2, fsdp=2, pp=2,
+                    global_batch=2, seq_len=2048, zero3=False)
+PAPER_CONFIGS = [CONFIG1, CONFIG2, CONFIG3, TESTBED]
+PAPER_IDS = ["config1", "config2", "config3", "testbed"]
+
+
+# ---------------------------------------------------------------------------
+# three-way engine parity on EVERY backend (satellite)
+# ---------------------------------------------------------------------------
+
+# (mode, SimParams backend overrides) — every valid cell of the §10
+# matrix on a 4-rank job (ocs_array radix 4 = the job fits one element)
+MATRIX_CASES = [
+    ("native", {}),
+    ("oneshot", {}),
+    ("oneshot", {"backend": "crossbar_ocs"}),
+    ("oneshot", {"backend": "ocs_array", "radix": 4}),
+    ("opus", {}),
+    ("opus", {"backend": "ocs_array", "radix": 4}),
+    ("opus_prov", {}),
+    ("opus_prov", {"backend": "ocs_array", "radix": 4}),
+]
+
+
+@pytest.mark.parametrize("mode,kw", MATRIX_CASES,
+                         ids=[f"{m}-{kw.get('backend', 'natural')}"
+                              for m, kw in MATRIX_CASES])
+def test_three_way_parity_every_backend(mode, kw):
+    """event (collapsed) == event_full (per-rank) BIT-exactly, both
+    tracking the closed-form model, on every mode x backend cell."""
+    wl = build(CONFIG1, "a100")
+    p = SimParams(mode=mode, ocs_latency=0.02, **kw)
+    a = simulate(wl, p, engine="analytic")
+    f = simulate(wl, p, engine="event_full")
+    c = simulate(wl, p, engine="event")
+    assert c.step_time == f.step_time
+    assert abs(f.step_time - a.step_time) / a.step_time < 1e-6
+    assert c.n_reconfigs == f.n_reconfigs == a.n_reconfigs
+    assert c.n_topo_writes == f.n_topo_writes == a.n_topo_writes
+    assert c.exposed_reconfig == f.exposed_reconfig
+    assert abs(c.exposed_reconfig - a.exposed_reconfig) < 1e-9
+    # the event engines really drove a plane (analytic has none)
+    assert c.telemetry is not None and f.telemetry is not None
+    assert a.telemetry is None
+
+
+@pytest.mark.parametrize("job", PAPER_CONFIGS, ids=PAPER_IDS)
+def test_patchpanel_oneshot_equals_closed_form(job):
+    """Satellite acceptance: oneshot through the REAL plane (PatchPanel
+    backend, STATIC shims) reproduces the old closed-form oneshot step
+    time BIT-exactly on the 4 paper configs — the bypass is gone but the
+    numbers are identical."""
+    wl = build(job, "a100")
+    p = SimParams(mode="oneshot")
+    a = simulate(wl, p, engine="analytic")
+    e = simulate(wl, p, engine="event")
+    assert e.engine == "event" and e.step_time == a.step_time
+    assert e.n_reconfigs == 0 and e.n_topo_writes == 0
+    t = e.telemetry
+    assert t is not None
+    assert t["n_barriers"] == 0           # STATIC shims never write
+    assert t["n_program_calls"] == 1      # the ONE registration patch
+    assert not t["fallback_giant_ring"]
+
+
+def test_native_packet_through_plane_with_zero_programming():
+    """native now runs through the plane too: STATIC shims route every
+    op, the PacketSwitch holds no circuits, telemetry shows zero
+    programming, and the step time equals the closed form bit-exactly."""
+    wl = build(CONFIG1, "a100")
+    a = simulate(wl, SimParams(mode="native"), engine="analytic")
+    e = simulate(wl, SimParams(mode="native"), engine="event")
+    assert e.step_time == a.step_time
+    t = e.telemetry
+    assert t["n_barriers"] == 0 and t["n_dispatches"] == 0
+    assert t["n_program_calls"] == 0 and t["n_ports_programmed"] == 0
+    assert t["n_topo_writes"] == 0 and t["n_waits"] == 0
+
+
+# ---------------------------------------------------------------------------
+# the mode x backend matrix (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode,tech", [
+    ("native", "crossbar_ocs"), ("native", "patch_panel"),
+    ("native", "ocs_array"), ("oneshot", "packet"),
+    ("opus", "packet"), ("opus", "patch_panel"),
+    ("opus_prov", "packet"), ("opus_prov", "patch_panel"),
+])
+def test_invalid_mode_backend_cells_rejected(mode, tech):
+    radix = 4 if tech == "ocs_array" else None
+    with pytest.raises(ValueError):
+        SimParams(mode=mode, backend=tech, radix=radix).fabric_spec()
+
+
+def test_plane_rejects_writing_shims_on_static_fabric():
+    """Defense-in-depth below the matrix: DEFAULT/PROVISIONING shims on
+    a fabric that cannot move is a wiring bug, not a scenario."""
+    with pytest.raises(AssertionError):
+        ControlPlane(CONFIG1, spec=FabricSpec(technology="patch_panel"),
+                     mode=DEFAULT)
+
+
+def test_simparams_mode_is_thin_constructor_over_fabricspec():
+    assert SimParams(mode="opus", ocs_latency=0.05,
+                     n_rails=2).fabric_spec() == \
+        FabricSpec(technology="crossbar_ocs", n_rails=2,
+                   reconfig_latency=0.05)
+    assert SimParams(mode="native").fabric_spec().technology == "packet"
+    assert SimParams(mode="oneshot").fabric_spec().technology == \
+        "patch_panel"
+    # a full spec override wins but is still matrix-validated
+    spec = FabricSpec(technology="ocs_array", radix=8)
+    assert SimParams(mode="opus", fabric=spec).fabric_spec() is spec
+    with pytest.raises(ValueError):
+        SimParams(mode="native", fabric=spec).fabric_spec()
+
+
+def test_canonical_name_lives_on_core_fabric():
+    fabric = pytest.importorskip("repro.core.fabric")  # needs jax
+    assert fabric.FabricSpec is FabricSpec
+    assert fabric.CrossbarOCS is CrossbarOCS
+
+
+# ---------------------------------------------------------------------------
+# PatchPanel semantics
+# ---------------------------------------------------------------------------
+
+
+def test_patch_panel_patches_and_unpatches_but_never_reconfigures():
+    panel = PatchPanel(8, reconfig_latency=0.5)
+    done = panel.program([], [(0, 1), (1, 0)], now=0.0)   # patch in
+    assert done == 0.5 and panel.connected(0) == 1
+    with pytest.raises(StaticFabricError):
+        panel.program([0, 1], [(0, 2), (2, 0)], now=1.0)  # re-wire
+    panel.program([0, 1], [], now=1.0)                    # unpatch out
+    assert panel.connected(0) is None
+
+
+def test_patch_panel_orchestrator_refuses_dispatch():
+    """A reconfiguration dispatch reaching a patch-panel rail fails
+    loudly at the hardware model, independent of the shim/controller
+    static guards above it."""
+    pl = build_placement(CONFIG1)
+    orch = RailOrchestrator(0, PatchPanel(4))
+    orch.register_job(pl, TopoId.uniform(2, 1))
+    with pytest.raises(StaticFabricError):
+        orch.apply("job0", TopoId((0, 0)))
+
+
+def test_controller_rejects_writes_on_static_plane():
+    plane = ControlPlane(CONFIG1, spec=FabricSpec(technology="patch_panel"),
+                         mode="static")
+    ops = iteration_schedule(CONFIG1)
+    plane.profile(ops)
+    with pytest.raises(AssertionError):
+        plane.controller.topo_write(0, "fsdp", 0)
+
+
+# ---------------------------------------------------------------------------
+# OCSArray semantics (ACOS-style arrays of small switches)
+# ---------------------------------------------------------------------------
+
+
+def test_ocs_array_rejects_cross_sub_switch_circuits():
+    arr = OCSArray(8, radix=4)
+    arr.program([], [(0, 1), (1, 0)])          # within sub-switch 0
+    with pytest.raises(CrossSubSwitchError):
+        arr.program([], [(3, 4)])              # spans 0 -> 1
+    assert arr.n_rejected_programs == 1
+    # the rejected program left no partial state
+    assert arr.connected(3) is None and arr.connected(4) is None
+    assert arr.connected(0) == 1
+
+
+def test_ocs_array_sub_switches_reconfigure_in_parallel():
+    """Disjoint sub-switches have independent reconfiguration clocks —
+    the array's structural advantage over one big crossbar."""
+    arr = OCSArray(8, radix=4, reconfig_latency=1.0)
+    assert arr.program([], [(0, 1)], now=0.0) == 1.0
+    assert arr.program([], [(4, 5)], now=0.0) == 1.0   # no queueing
+    assert arr.n_queued_programs == 0
+    # same sub-switch busy -> queues exactly like the crossbar would
+    assert arr.program([0], [], now=0.0) == 2.0
+    assert arr.n_queued_programs == 1
+    xbar = CrossbarOCS(8, reconfig_latency=1.0)
+    xbar.program([], [(0, 1)], now=0.0)
+    assert xbar.program([], [(4, 5)], now=0.0) == 2.0  # serialized
+    assert xbar.n_queued_programs == 1
+
+
+def test_ocs_array_job_spanning_sub_switches_rejected_at_registration():
+    """Admission effect the crossbar hides: a ring that does not fit one
+    sub-switch cannot be placed on the array at all."""
+    job = JobConfig(model=CFG, tp=4, fsdp=4, pp=1, global_batch=16,
+                    seq_len=2048)
+    spec = FabricSpec(technology="ocs_array", radix=2)
+    with pytest.raises(CrossSubSwitchError):
+        ControlPlane(job, spec=spec)
+
+
+def test_ocs_array_cross_sub_switch_isolation_under_fault():
+    """Two tenants in separate sub-switches of one shared OCSArray rail:
+    tenant A's persistent OCS failure demotes A to its §4.2 giant ring
+    STRICTLY inside A's own sub-switch; B's circuits are untouched."""
+    jobA = JobConfig(model=CFG, tp=1, fsdp=2, pp=2, global_batch=16,
+                     seq_len=2048)
+    jobB = JobConfig(model=CFG, tp=1, fsdp=2, pp=2, global_batch=16,
+                     seq_len=2048)
+    spec = FabricSpec(technology="ocs_array", radix=4,
+                      reconfig_latency=0.01)
+    rail = RailOrchestrator(0, spec.make_backend(8))
+    planeA = ControlPlane(jobA, mode=DEFAULT, job_id="A", spec=spec,
+                          orchestrators=[rail], ports=(0, 1, 2, 3),
+                          ocs_fail=lambda attempt: True)
+    ControlPlane(jobB, mode=DEFAULT, job_id="B", spec=spec,
+                 orchestrators=[rail], ports=(4, 5, 6, 7))
+    b_before = {p: rail.ocs.connected(p) for p in (4, 5, 6, 7)}
+    ops = iteration_schedule(jobA)
+    planeA.profile(ops)
+    planeA.start_iteration()
+    for op in ops:
+        if op.scale != "scale_out":
+            continue
+        for r in range(planeA.n_ranks):
+            planeA.pre_comm(r, op, now=0.0)
+            planeA.post_comm(r, op, now=0.0)
+        if planeA.fallback_giant_ring:
+            break
+    assert planeA.fallback_giant_ring
+    # A's fallback ring is the cycle over A's ports — all in sub-switch 0
+    seen, p = set(), 0
+    for _ in range(4):
+        seen.add(p)
+        p = rail.ocs.connected(p)
+    assert seen == {0, 1, 2, 3}
+    # B's circuits never moved
+    assert {p: rail.ocs.connected(p) for p in (4, 5, 6, 7)} == b_before
+    assert rail.ocs.n_rejected_programs == 0
+
+
+def test_ocs_array_spanning_placement_rejected_at_plane_registration():
+    """The facade enforces the placement rule up front: a port grant
+    spanning sub-switches is rejected when the plane registers the job,
+    not at the first mid-run dispatch — even if the initial topology's
+    circuits happen not to straddle (ways (0,1) and (4,5): the digit-1
+    rings fit, but a PP phase or the §4.2 fallback ring could not)."""
+    job = JobConfig(model=CFG, tp=1, fsdp=2, pp=2, global_batch=16,
+                    seq_len=2048)
+    spec = FabricSpec(technology="ocs_array", radix=4,
+                      reconfig_latency=0.01)
+    rail = RailOrchestrator(0, spec.make_backend(8))
+    with pytest.raises(CrossSubSwitchError):
+        ControlPlane(job, mode=DEFAULT, job_id="S", spec=spec,
+                     orchestrators=[rail], ports=(0, 1, 4, 5))
+    assert "S" not in rail.jobs           # nothing half-registered
+
+
+def test_ocs_array_spanning_fallback_ring_rejected_at_hardware():
+    """Defense-in-depth below the facade check: if a spanning tenant is
+    registered at the orchestrator level anyway, its giant fallback
+    ring crosses a sub-switch boundary and the array hardware model
+    rejects the impossible wiring instead of silently programming it."""
+    job = JobConfig(model=CFG, tp=1, fsdp=2, pp=2, global_batch=16,
+                    seq_len=2048)
+    rail = RailOrchestrator(0, OCSArray(8, radix=4, reconfig_latency=0.01))
+    pl = build_placement(job, "S", ports=(0, 1, 4, 5))
+    rail.register_job(pl, TopoId.uniform(2, 1))   # digit-1 rings fit
+    with pytest.raises(CrossSubSwitchError):
+        rail.apply_giant_ring("S")                # cycle 0-1-4-5 cannot
+
+
+def test_ocs_array_fallback_ack_ignores_other_sub_switch_busy():
+    """apply_giant_ring's ack time is its OWN program's completion: a
+    neighbour tenant's in-flight reconfiguration on a different
+    sub-switch must not inflate the faulted tenant's exposed time."""
+    job = JobConfig(model=CFG, tp=1, fsdp=2, pp=2, global_batch=16,
+                    seq_len=2048)
+    arr = OCSArray(8, radix=4, reconfig_latency=0.01)
+    rail = RailOrchestrator(0, arr)
+    rail.register_job(build_placement(job, "A", ports=(0, 1, 2, 3)),
+                      TopoId.uniform(2, 1))
+    rail.register_job(build_placement(job, "B", ports=(4, 5, 6, 7)),
+                      TopoId.uniform(2, 1))
+    arr.program([4], [], now=5.0)          # B's sub-switch busy to 5.01
+    done = rail.apply_giant_ring("A", now=1.0)
+    assert done == pytest.approx(1.01)     # NOT 5.01
+    assert arr.busy_until == pytest.approx(5.01)
+
+
+def test_radix_on_non_array_technology_rejected():
+    """'One object, both numbers': a radix the timing side would ignore
+    but the bill would honour is a spec contradiction, not a knob."""
+    with pytest.raises(ValueError):
+        FabricSpec(technology="crossbar_ocs", radix=16)
+    with pytest.raises(ValueError):
+        SimParams(mode="opus", radix=16).fabric_spec()
+
+
+def test_cluster_on_ocs_array_admission_and_contention():
+    """Shared-rail cluster on an OCSArray: aligned tenants admit and run
+    with ZERO cross-tenant reconfiguration queueing (independent
+    sub-switch clocks); a tenant bigger than the radix is rejected
+    outright; a straddling grant waits for an aligned slot."""
+    from repro.sim.cluster import (ClusterJobSpec, ClusterParams,
+                                   catalog_jobs, simulate_cluster)
+    specs = catalog_jobs(4, 16, mean_gap=0.5)
+    arr = simulate_cluster(specs, ClusterParams(
+        n_ports=64, ocs_latency=0.01, backend="ocs_array", radix=16))
+    xbar = simulate_cluster(catalog_jobs(4, 16, mean_gap=0.5),
+                            ClusterParams(n_ports=64, ocs_latency=0.01))
+    sa, sx = arr.summary(), xbar.summary()
+    assert sa["n_done"] == sx["n_done"] == 4
+    assert sa["rails"]["n_reconfig_events"] == \
+        sx["rails"]["n_reconfig_events"]
+    assert sx["rails"]["n_queued_programs"] > 0     # crossbar serializes
+    assert sa["rails"]["n_queued_programs"] == 0    # array does not
+    # oversized tenant: can never fit one sub-switch -> rejected
+    big = ClusterJobSpec(
+        "big", JobConfig(model=CFG, tp=1, fsdp=16, pp=2, global_batch=32,
+                         seq_len=2048))
+    res = simulate_cluster([big], ClusterParams(
+        n_ports=64, backend="ocs_array", radix=16))
+    assert res.jobs[0].status == "rejected"
+
+
+def test_cluster_ocs_array_straddling_grant_waits_for_alignment():
+    """12-rank tenants on radix-16 sub-switches: the second grant
+    (ports 12-23) straddles a boundary, so the job queues until the
+    first departs and the aligned range frees — the ACOS fragmentation
+    effect expressed as scheduling, not a crash."""
+    from repro.sim.cluster import (ClusterJobSpec, ClusterParams,
+                                   simulate_cluster)
+    job = JobConfig(model=CFG.replace(n_layers=4), tp=1, fsdp=6, pp=2,
+                    global_batch=12, seq_len=2048)
+    specs = [ClusterJobSpec("a", job, arrival=0.0),
+             ClusterJobSpec("b", job, arrival=0.0)]
+    res = simulate_cluster(specs, ClusterParams(
+        n_ports=32, ocs_latency=0.01, backend="ocs_array", radix=16))
+    a, b = res.jobs
+    assert a.status == "done" and b.status == "done"
+    assert b.queueing_delay > 0.0          # waited despite 20 free ports
+    assert b.ports == a.ports == tuple(range(12))   # re-used the slot
+    # the same mix on a crossbar admits both immediately
+    res2 = simulate_cluster(
+        [ClusterJobSpec("a", job, arrival=0.0),
+         ClusterJobSpec("b", job, arrival=0.0)],
+        ClusterParams(n_ports=32, ocs_latency=0.01))
+    assert all(r.queueing_delay == 0.0 for r in res2.jobs)
+
+
+# ---------------------------------------------------------------------------
+# PacketSwitch semantics
+# ---------------------------------------------------------------------------
+
+
+def test_packet_switch_is_always_connected_and_free():
+    sw = PacketSwitch(8)
+    assert not sw.programmable
+    assert sw.program([0], [(0, 1)], now=3.0) == 3.0   # accepted, free
+    assert sw.circuits == {} and sw.connected(0) is None
+    assert sw.n_program_calls == 0 and sw.busy_until == 0.0
+
+
+# ---------------------------------------------------------------------------
+# one spec, both numbers (billing contract with sim/costmodel)
+# ---------------------------------------------------------------------------
+
+
+def test_same_spec_drives_timing_and_the_bill():
+    """The acceptance contract: the FabricSpec the simulator timed is
+    the object the Fig-14 bill is computed from — and for the default
+    crossbar it reproduces the part-name-string numbers exactly."""
+    p = SimParams(mode="opus_prov", ocs_latency=0.01)
+    spec = p.fabric_spec()
+    r = simulate(build(CONFIG1, "h200"), p)
+    assert r.telemetry is not None and r.n_reconfigs > 0   # it was timed
+    c_spec = compare(2048, 8, FabricSpec(technology="packet",
+                                         part="eps_400g"), ocs=spec)
+    c_name = compare(2048, 8, "eps_400g")
+    assert c_spec == c_name
+
+
+def test_ocs_array_bill_counts_sub_switch_chassis():
+    spec = FabricSpec(technology="ocs_array", radix=64)
+    bill = rail_fabric(2048, 8, spec)
+    assert bill.n_switches == 8 * math.ceil((2048 // 8) / 64)
+    big = rail_fabric(2048, 8, "ocs")
+    # ACOS: arrays of cheap small switches undercut the big chassis
+    assert bill.cost < big.cost
+    assert bill.fabric == "ocs_small"
+
+
+def test_patch_panel_bill_is_passive():
+    bill = rail_fabric(2048, 8, FabricSpec(technology="patch_panel"))
+    assert bill.power == 0.0
+    assert bill.cost < rail_fabric(2048, 8, "ocs").cost
+
+
+def test_radix_defaults_to_part_ports_bit_identically():
+    """A spec without radix bills exactly like the bare part name (the
+    pre-spec formula) — float for float."""
+    for part in ("eps_400g", "eps_800g_cpo", "ocs"):
+        a = rail_fabric(1024, 8, part)
+        b = rail_fabric(1024, 8, rail := FabricSpec(
+            technology="packet" if part.startswith("eps_") else
+            "crossbar_ocs", part=part))
+        assert (a.cost, a.power, a.n_switches) == \
+            (b.cost, b.power, b.n_switches), (part, rail)
