@@ -120,6 +120,30 @@ def summary_markdown(records: Dict[str, dict]) -> str:
                     f"{c['n_queued_programs']} queued programs, "
                     f"{c['queue_wait_s']:.3f}s switch-busy wait")
             lines.append(f"\nwall: {rec['wall_s']}s")
+        elif "fleets" in rec:
+            lines.append("| backend | req/s | goodput | p99 TTFT | "
+                         "peak GPUs | net kW | req/s per net-kW |")
+            lines.append("|---|---:|---:|---:|---:|---:|---:|")
+            for fl in rec["fleets"]:
+                s = fl["summary"]
+                radix = "" if fl["radix"] is None else f" (r{fl['radix']})"
+                lines.append(
+                    f"| {fl['backend']}{radix} "
+                    f"| {s['throughput_rps']:.1f} "
+                    f"| {s['goodput_rps']:.1f} "
+                    f"| {1e3 * s['p99_ttft_s']:.1f} ms "
+                    f"| {s['peak_gpus']} "
+                    f"| {s['network_power_w'] / 1e3:.2f} "
+                    f"| {s['rps_per_net_kw']:.2f} |")
+            h = rec.get("headline", {})
+            if h:
+                lines.append(
+                    f"\nOCS vs packet: "
+                    f"**{h['net_power_ratio_packet_over_ocs']:.1f}x** less "
+                    f"network power at "
+                    f"{100 * h['p99_ttft_overhead_vs_packet']:+.1f}% "
+                    f"p99 TTFT")
+            lines.append(f"\nwall: {rec['wall_s']}s")
         elif "points" in rec:
             lines.append("| point | GPUs | peak util | frag (peak) | "
                          "mean overhead | max queue delay | OCS queued |")

@@ -4,6 +4,7 @@
     PYTHONPATH=src python -m benchmarks.run --perf     # BENCH_opus_sim.json
     PYTHONPATH=src python -m benchmarks.run --cluster  # BENCH_opus_cluster.json
     PYTHONPATH=src python -m benchmarks.run --backend  # BENCH_opus_fabric.json
+    PYTHONPATH=src python -m benchmarks.run --serve    # BENCH_opus_serve.json
 
 Prints each paper artifact's reproduction and a summary block, then the
 roofline table assembled from results/dryrun/*.json (produced by
@@ -17,9 +18,13 @@ plane-call counters to ``BENCH_opus_sim.json``; ``--cluster`` sweeps
 ``BENCH_opus_cluster.json``; ``--backend`` sweeps the SwitchBackend axis
 (packet / patch panel / crossbar / OCS array, DESIGN.md §10) and writes
 ``BENCH_opus_fabric.json`` — timing AND the Fig-14 bill per row, both
-derived from one FabricSpec.  CI runs all three after the smoke subset
-and gates them against benchmarks/baselines/ via benchmarks/check_perf.py
-(wall-clock ratio + exact counter match).
+derived from one FabricSpec; ``--serve`` runs the disaggregated
+prefill/decode serving fleet (DESIGN.md §11) on each backend against
+one deterministic diurnal+burst trace and writes
+``BENCH_opus_serve.json`` — req/s-per-watt and p99 TTFT, OCS vs packet.
+CI runs all four after the smoke subset and gates them against
+benchmarks/baselines/ via benchmarks/check_perf.py (wall-clock ratio +
+exact counter match).
 """
 from __future__ import annotations
 
@@ -210,6 +215,65 @@ def fabric_report(out_path: str = "BENCH_opus_fabric.json") -> dict:
     return rec
 
 
+def serve_report(out_path: str = "BENCH_opus_serve.json") -> dict:
+    """Serving-fleet sweep (DESIGN.md §11): a disaggregated prefill/
+    decode fleet — every replica a real collapsed control plane on
+    shared per-rail OCS port space, KV handoff a first-class rail
+    workload — run against ONE deterministic diurnal+burst trace on
+    each SwitchBackend, billed from the same FabricSpec that timed it.
+    The headline the paper's Opus architecture promises for inference:
+    the OCS fabric's power win at single-digit-% serving-latency cost."""
+    from repro.configs.base import get_config
+    from repro.core import phases as ph
+    from repro.sim.serving import FleetParams, PoolSpec, simulate_fleet
+    from repro.sim.traces import TraceParams
+
+    job = ph.JobConfig(model=get_config("llama_80b"), tp=8, fsdp=8, pp=1,
+                       global_batch=64, seq_len=4096, n_microbatch=1)
+    prefill = PoolSpec(job, min_replicas=8, max_replicas=16,
+                       ref_prompt_tokens=2048)
+    decode = PoolSpec(job, min_replicas=3, max_replicas=8, batch_slots=16)
+    trace = TraceParams(duration_s=60.0, base_rate=14.0, diurnal_amp=0.4,
+                        diurnal_period_s=60.0, bursts=((20.0, 10.0, 1.5),),
+                        seed=3)
+    sweep = (("crossbar_ocs", None), ("ocs_array", 64), ("packet", None))
+    print("== serving fleet: req/s-per-watt across fabric backends ==")
+    rows = []
+    t_all = time.perf_counter()
+    for backend, radix in sweep:
+        params = FleetParams(n_ports=2048, ocs_latency=0.01, gpu="h200",
+                             backend=backend, radix=radix)
+        s = simulate_fleet(params, prefill, decode, trace).summary()
+        rows.append({"backend": backend, "radix": radix, "summary": s})
+        print(f"  {backend:12s}"
+              f"{'' if radix is None else f' (r{radix})':7s}: "
+              f"{s['throughput_rps']:5.1f} req/s, "
+              f"p99 TTFT {s['p99_ttft_s'] * 1e3:7.1f} ms, "
+              f"peak {s['peak_gpus']} GPUs, "
+              f"net {s['network_power_w'] / 1e3:6.2f} kW -> "
+              f"{s['rps_per_net_kw']:6.2f} req/s per network-kW")
+    pkt = rows[-1]["summary"]
+    ocs = rows[0]["summary"]
+    headline = {
+        "net_power_ratio_packet_over_ocs":
+            round(pkt["network_power_w"] / ocs["network_power_w"], 6),
+        "p99_ttft_overhead_vs_packet":
+            round(ocs["p99_ttft_s"] / pkt["p99_ttft_s"] - 1, 6),
+    }
+    wall = time.perf_counter() - t_all
+    rec = {"bench": "opus_serve_fleet",
+           "gpus_per_replica": job.n_gpus,
+           "wall_s": round(wall, 4), "fleets": rows,
+           "headline": headline}
+    Path(out_path).write_text(json.dumps(rec, indent=2) + "\n")
+    print(f"  crossbar vs packet: "
+          f"{headline['net_power_ratio_packet_over_ocs']:.1f}x less "
+          f"network power at "
+          f"{100 * headline['p99_ttft_overhead_vs_packet']:+.1f}% p99 TTFT")
+    print(f"  wall={wall:.3f}s  -> {out_path}")
+    return rec
+
+
 # (n_jobs, ranks_per_job, shared ports per rail, allocation policy):
 # capacity-rich 4-job point, then increasingly multiplexed mixes where
 # arrivals queue on port space and reconfigs contend on the shared OCS
@@ -272,6 +336,10 @@ def main():
                     help="write BENCH_opus_fabric.json (SwitchBackend "
                          "sweep: timing + Fig-14 bill per FabricSpec) "
                          "and exit")
+    ap.add_argument("--serve", action="store_true",
+                    help="write BENCH_opus_serve.json (serving-fleet "
+                         "sweep: req/s-per-watt + p99 TTFT, OCS vs "
+                         "packet from one FabricSpec) and exit")
     args = ap.parse_args()
 
     if args.perf:
@@ -282,6 +350,9 @@ def main():
         return 0
     if args.backend:
         fabric_report()
+        return 0
+    if args.serve:
+        serve_report()
         return 0
 
     headlines = {}

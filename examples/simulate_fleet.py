@@ -1,0 +1,139 @@
+"""Serving-fleet what-if analysis on photonic rails (DESIGN.md §11).
+
+Runs a disaggregated prefill/decode fleet — every replica a real control
+plane on shared per-rail OCS port space — against a deterministic
+diurnal + bursty request trace, and prints the serving tradeoff:
+requests/s-per-watt and p99 TTFT, OCS vs electrical packet fabric.
+
+    PYTHONPATH=src python examples/simulate_fleet.py \
+        --model llama_80b --tp 8 --fsdp 8 --rate 14 --duration 60
+
+    # all three backends from one FabricSpec, side by side
+    PYTHONPATH=src python examples/simulate_fleet.py --compare
+"""
+import argparse
+
+from repro.configs.base import get_config
+from repro.core.phases import JobConfig
+from repro.sim.serving import FleetParams, PoolSpec, simulate_fleet
+from repro.sim.traces import TraceParams, make_trace, trace_stats
+from repro.sim.workload import GPUS
+
+BACKENDS = ("crossbar_ocs", "ocs_array", "packet")
+
+
+def build_setup(args):
+    cfg = get_config(args.model)
+    job = JobConfig(model=cfg, tp=args.tp, fsdp=args.fsdp, pp=1,
+                    global_batch=args.fsdp * 8, seq_len=args.seq,
+                    n_microbatch=1)
+    prefill = PoolSpec(job, min_replicas=args.min_prefill,
+                       max_replicas=args.max_prefill,
+                       ref_prompt_tokens=args.seq // 2)
+    decode = PoolSpec(job, min_replicas=args.min_decode,
+                      max_replicas=args.max_decode,
+                      batch_slots=args.slots)
+    trace = TraceParams(duration_s=args.duration, base_rate=args.rate,
+                        diurnal_amp=0.4, diurnal_period_s=args.duration,
+                        bursts=((args.duration / 3, args.duration / 6,
+                                 1.5),),
+                        seed=args.seed)
+    return job, prefill, decode, trace
+
+
+def fleet_params(args, backend):
+    return FleetParams(n_ports=args.ports, n_rails=args.rails,
+                       policy=args.policy, ocs_latency=args.ocs_latency,
+                       gpu=args.gpu, backend=backend,
+                       radix=args.radix if backend == "ocs_array" else None,
+                       handoff_interval_s=args.flush,
+                       ttft_slo_s=args.slo)
+
+
+def print_fleet(res, backend):
+    s = res.summary()
+    print(f"  {backend}:")
+    print(f"    {s['n_completed']}/{s['n_requests']} requests served, "
+          f"{s['throughput_rps']:.1f} req/s "
+          f"({s['goodput_rps']:.1f} req/s inside the "
+          f"{res.params.ttft_slo_s:.0f}s TTFT SLO)")
+    print(f"    TTFT p50 {s['p50_ttft_s'] * 1e3:7.1f} ms   "
+          f"p99 {s['p99_ttft_s'] * 1e3:7.1f} ms   "
+          f"TPOT {s['mean_tpot_s'] * 1e3:.2f} ms")
+    print(f"    peak {s['peak_replicas']} replicas / {s['peak_gpus']} GPUs; "
+          f"{s['n_scale_ups']} scale-ups, {s['n_scale_downs']} downs, "
+          f"{s['n_drain_migrations']} drain migrations")
+    print(f"    KV handoff: {s['n_handoff_flushes']} flush phases, "
+          f"{s['n_handoff_circuits']} circuits, "
+          f"{s['n_handoff_relays']} relayed")
+    if "network_power_w" in s:
+        print(f"    network {s['network_power_w'] / 1e3:.2f} kW -> "
+              f"{s['rps_per_net_kw']:.2f} req/s per network-kW "
+              f"({s['rps_per_total_kw']:.4f} incl. "
+              f"{s['gpu_power_w'] / 1e3:.0f} kW of GPUs)")
+    return s
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="llama_80b")
+    ap.add_argument("--gpu", default="h200", choices=list(GPUS))
+    ap.add_argument("--tp", type=int, default=8)
+    ap.add_argument("--fsdp", type=int, default=8,
+                    help="scale-out ways per replica (= rail ports)")
+    ap.add_argument("--seq", type=int, default=4096)
+    ap.add_argument("--slots", type=int, default=16,
+                    help="resident decode slots per replica")
+    ap.add_argument("--min-prefill", type=int, default=8)
+    ap.add_argument("--max-prefill", type=int, default=16)
+    ap.add_argument("--min-decode", type=int, default=3)
+    ap.add_argument("--max-decode", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=14.0,
+                    help="mean request arrival rate (req/s)")
+    ap.add_argument("--duration", type=float, default=60.0)
+    ap.add_argument("--seed", type=int, default=3)
+    ap.add_argument("--ports", type=int, default=2048,
+                    help="shared OCS ports per rail")
+    ap.add_argument("--rails", type=int, default=1)
+    ap.add_argument("--policy", default="contiguous",
+                    choices=["contiguous", "fragmented"])
+    ap.add_argument("--ocs-latency", type=float, default=0.01)
+    ap.add_argument("--flush", type=float, default=0.05,
+                    help="KV-handoff flush cadence (s); each flush is ONE "
+                         "migrate + ONE restore program on the rails")
+    ap.add_argument("--slo", type=float, default=5.0,
+                    help="TTFT SLO for goodput (s)")
+    ap.add_argument("--backend", default="crossbar_ocs", choices=BACKENDS)
+    ap.add_argument("--radix", type=int, default=64,
+                    help="ocs_array sub-switch radix")
+    ap.add_argument("--compare", action="store_true",
+                    help="run every backend and print the power tradeoff")
+    args = ap.parse_args()
+
+    job, prefill, decode, trace = build_setup(args)
+    st = trace_stats(make_trace(trace), trace)
+    print(f"{args.model} serving fleet on {args.gpu} "
+          f"(TP={args.tp} FSDP={args.fsdp}, {job.n_gpus} GPUs/replica): "
+          f"{st.n_requests} requests over {trace.duration_s:.0f}s "
+          f"({st.mean_rate_rps:.1f} req/s mean, diurnal + burst)")
+
+    backends = BACKENDS if args.compare else (args.backend,)
+    rows = {}
+    for backend in backends:
+        res = simulate_fleet(fleet_params(args, backend), prefill, decode,
+                             trace)
+        rows[backend] = print_fleet(res, backend)
+    if args.compare and "packet" in rows:
+        pkt = rows["packet"]
+        for backend in backends:
+            if backend == "packet":
+                continue
+            s = rows[backend]
+            dt = s["p99_ttft_s"] / pkt["p99_ttft_s"] - 1
+            dw = pkt["network_power_w"] / s["network_power_w"]
+            print(f"  -> {backend}: {dw:.1f}x less network power than the "
+                  f"packet fabric at {100 * dt:+.1f}% p99 TTFT")
+
+
+if __name__ == "__main__":
+    main()

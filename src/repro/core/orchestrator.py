@@ -43,6 +43,17 @@ class JobTopoState:
     n_ports_programmed: int = 0
 
 
+@dataclass(frozen=True)
+class MigrationTicket:
+    """Outcome of one batched cross-tenant migration program."""
+
+    done: float          # switch completion time (circuits ready)
+    n_circuits: int      # handoff pairs wired as direct circuits
+    n_relayed: int       # pairs with no circuit (cross-sub-switch on an
+    #                      OCSArray, or a circuit-free packet fabric):
+    #                      traffic is relayed/routed at reduced bandwidth
+
+
 class RailOrchestrator:
     """One per rail: owns the rail's OCS and all jobs' sub-mappings."""
 
@@ -166,6 +177,82 @@ class RailOrchestrator:
         # ocs.busy_until is the max over ALL sub-switches and would leak
         # another tenant's busy clock into this job's ack time
         return self.ocs.program(ports, pairs, now)
+
+    # -- cross-tenant KV migration (DESIGN.md §11) ---------------------------
+    def migrate(self, handoffs: List[Tuple[str, str, Tuple[int, ...],
+                                           Tuple[int, ...]]],
+                now: float = 0.0) -> "MigrationTicket":
+        """Point-to-point KV-handoff circuits between CONSENTING tenants.
+
+        ``handoffs`` is a batch of ``(src_job, dst_job, src_ports,
+        dst_ports)`` entries, wired in ONE switch program (the serving
+        fleet's handoff phase — batching is what keeps a busy OCS from
+        saturating on per-request reconfigurations).  Each side's ports
+        are ownership-asserted against ITS OWN tenant — a handoff is the
+        one sanctioned cross-tenant operation, and it still never names a
+        port owned by a third party.  Source ports are disconnected from
+        their current circuits (the src ring is broken until
+        :meth:`restore`); on an :class:`~repro.core.fabricspec.OCSArray`,
+        pairs spanning sub-switch boundaries cannot hold a circuit and
+        are reported as relayed (routed at reduced bandwidth) instead of
+        raising.  A circuit-free fabric (PacketSwitch) relays everything:
+        no program, no reconfiguration, ``done == now``.
+        """
+        pairs: List[Tuple[int, int]] = []
+        src_jobs: List[str] = []
+        for src_job, dst_job, src_ports, dst_ports in handoffs:
+            self._assert_owned(src_job, src_ports)
+            self._assert_owned(dst_job, dst_ports)
+            assert src_job != dst_job, \
+                f"self-migration for {src_job!r} never touches the rails"
+            pairs.extend(zip(src_ports, dst_ports))
+            src_jobs.append(src_job)
+        if not pairs:
+            return MigrationTicket(now, 0, 0)
+        if not self.ocs.programmable:
+            return MigrationTicket(now, 0, len(pairs))
+        sub = getattr(self.ocs, "sub_switch", None)
+        wired = [p for p in pairs if sub is None or sub(p[0]) == sub(p[1])]
+        relayed = len(pairs) - len(wired)
+        if not wired:
+            return MigrationTicket(now, 0, relayed)
+        disco = sorted({a for a, _ in wired
+                        if self.ocs.connected(a) is not None})
+        self.n_reconfig_events += 1
+        for j in src_jobs:
+            st = self.jobs[j]
+            st.n_reconfig_events += 1
+            self._programmed(st, 0)
+        # ports are billed once, to the batch (not per tenant): split the
+        # count over the participating sources deterministically
+        n_ports = len(disco) + len(wired)
+        self.jobs[src_jobs[0]].n_ports_programmed += n_ports
+        done = self.ocs.program(disco, wired, now)
+        return MigrationTicket(done, len(wired), relayed)
+
+    def restore(self, job_ids: Iterable[str],
+                now: float = 0.0) -> float:
+        """Reinstate the stored sub-mappings of ``job_ids`` after a
+        migration borrowed their source ports — ONE program re-wiring
+        every affected ring (the handoff phase's closing reconfiguration).
+        No-op (and free) on a circuit-free fabric."""
+        job_ids = list(job_ids)
+        if not job_ids or not self.ocs.programmable:
+            return now
+        disco: set = set()
+        conn: List[Tuple[int, int]] = []
+        for j in job_ids:
+            st = self.jobs[j]
+            ports = sorted(st.placement.all_ports)
+            self._assert_owned(j, ports)
+            pairs = [p for sm in st.submaps.values() for p in sm.pairs]
+            disco.update(p for p in ports
+                         if self.ocs.connected(p) is not None)
+            conn.extend(pairs)
+            st.n_reconfig_events += 1
+            self._programmed(st, len(pairs))
+        self.n_reconfig_events += 1
+        return self.ocs.program(sorted(disco), conn, now)
 
     def job_stats(self, job_id: str) -> Dict[str, int]:
         """Per-job programming counters (shared-rail telemetry source)."""

@@ -248,6 +248,69 @@ def iteration_schedule(job: JobConfig, *, t_fwd_layer: float = 0.0,
 
 
 # ---------------------------------------------------------------------------
+# serving-step schedules (DESIGN.md §11; shapes from repro/serve/step.py)
+# ---------------------------------------------------------------------------
+
+SERVE_KINDS = ("prefill", "decode")
+
+# weight-resident decode reduces activation partials once per projection
+# (qkv / attn-out / ffn-up / ffn-down) — see serve.step._make_resident_...
+DECODE_PROJECTIONS = 4
+
+
+def decode_ar_bytes(job: JobConfig, batch_slots: int) -> float:
+    """Per-layer rail bytes of one weight-resident decode step: one
+    [B, 1, d_model] ring AllReduce per projection (2(n-1)/n factor),
+    batched into a single per-layer op (same total bytes, fewer events).
+    """
+    act = batch_slots * job.model.d_model * BYTES["bfloat16"]
+    ring = 2.0 * (job.fsdp - 1) / job.fsdp
+    return float(DECODE_PROJECTIONS * act * ring)
+
+
+def serving_schedule(job: JobConfig, kind: str, *, batch_slots: int = 1,
+                     t_layer: float = 0.0) -> List[CommOp]:
+    """Rail CommOp stream of ONE serving step (prefill or decode).
+
+    prefill  forward-only Fig-3 row: one per-layer FSDP parameter
+             AllGather per layer, overlapped with that layer's forward
+             compute — the same bytes and phase structure the training
+             forward schedules (serve.step.make_prefill_step).  A single
+             symmetric phase, so the steady state needs ZERO
+             reconfigurations: the ring is programmed at registration and
+             never moves.
+    decode   weight-resident resident decode (serve.step.
+             _make_resident_decode_step): params stay rail-sharded; each
+             layer reduces activation-sized partial sums over the rails.
+             Also one static ring — zero reconfigurations by construction
+             (the property that lets serving share rails with training).
+
+    A TP-only replica (``fsdp == 1``) is rail-silent: its stream carries
+    the per-layer compute on zero-byte scale-up markers (TP traffic is
+    intra-domain), so the event engine still measures a step time while
+    programming nothing on the rails.
+    """
+    assert kind in SERVE_KINDS, kind
+    assert job.pp == 1 and job.cp == 1 and job.ep == 1, \
+        "serving replicas are TP x FSDP meshes (serve/step.py)"
+    ops: List[CommOp] = []
+    if job.fsdp <= 1:
+        for layer in range(job.model.n_layers):
+            ops.append(CommOp(layer, "tp", "all_reduce", 0, 0, 0.0,
+                              "scale_up", t_layer))
+        return ops
+    for layer in range(job.model.n_layers):
+        if kind == "prefill":
+            ops.append(CommOp(layer, "fsdp", "all_gather", 0, 0,
+                              fsdp_ag_bytes(job), "scale_out", t_layer))
+        else:
+            ops.append(CommOp(layer, "fsdp", "all_reduce", 0, 0,
+                              decode_ar_bytes(job, batch_slots),
+                              "scale_out", t_layer))
+    return ops
+
+
+# ---------------------------------------------------------------------------
 # phase table (paper §4.2 "Profiling Parallelism Phases")
 # ---------------------------------------------------------------------------
 

@@ -117,6 +117,14 @@ def plane_report(cfg, mesh, global_batch: int, seq_len: int,
     print(f"  {p['n_barriers']} barriers, {p['n_dispatches']} dispatches, "
           f"{p['n_topo_writes']} topo_writes, "
           f"{p['n_ports_programmed']} ports programmed")
+    rm = p["rail_mapping"]
+    ports = rm["ports_per_rail"]
+    span = (f"port {ports[0]}" if len(ports) == 1
+            else f"ports {ports[0]}-{ports[-1]}")
+    print(f"  rail mapping: TP={rm['scale_up_ways']} on scale-up, "
+          f"{rm['scale_out_ranks']} scale-out rank"
+          f"{'' if rm['scale_out_ranks'] == 1 else 's'}/rail ({span}"
+          + (", rail-silent)" if rm["rail_silent"] else ")"))
     return p
 
 

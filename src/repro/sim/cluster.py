@@ -43,7 +43,7 @@ from repro.core.orchestrator import PortAllocator, RailOrchestrator
 from repro.core.plane import ControlPlane
 from repro.sim.opus_sim import (SHIM_MODE, EventEngine, SimParams, SimResult,
                                 simulate)
-from repro.sim.workload import GPUS, build
+from repro.sim.workload import GPUS, build, build_serving
 
 
 def exp_trace(n: int, mean_gap: float, seed: int = 1) -> List[float]:
@@ -98,6 +98,12 @@ class ClusterJobSpec:
     arrival: float = 0.0
     mode: str = "opus_prov"       # opus | opus_prov | oneshot
     iterations: int = 2           # warmup + measured, like the engine
+    # what the tenant RUNS on its ports: a training iteration (default)
+    # or a serving replica's step (DESIGN.md §11) — training and serving
+    # share the same rails, so the cluster mix is a spec field, not a
+    # separate simulator
+    workload: str = "train"       # train | serve_prefill | serve_decode
+    batch_slots: int = 16         # resident slots (serve_decode only)
 
     def __post_init__(self):
         # every tenant drives the real control plane on the shared rails.
@@ -107,6 +113,12 @@ class ClusterJobSpec:
         # is not a circuit switch a photonic rail cluster could share.
         assert self.mode in ("opus", "opus_prov", "oneshot"), self.mode
         assert self.arrival >= 0.0, self.arrival
+        assert self.workload in ("train", "serve_prefill", "serve_decode"), \
+            self.workload
+        if self.workload != "train":
+            assert self.job.pp == 1 and self.job.cp == 1 \
+                and self.job.ep == 1, \
+                "serving tenants are TP x FSDP meshes (serve/step.py)"
 
     @property
     def n_ranks(self) -> int:
@@ -253,7 +265,12 @@ class ClusterSim:
 
     def _start(self, rec: JobRecord,
                seq: int) -> Tuple[JobRecord, EventEngine, object, int]:
-        wl = build(rec.spec.job, self.params.gpu)
+        if rec.spec.workload == "train":
+            wl = build(rec.spec.job, self.params.gpu)
+        else:
+            wl = build_serving(rec.spec.job, self.params.gpu,
+                               rec.spec.workload.split("_", 1)[1],
+                               batch_slots=rec.spec.batch_slots)
         engine = EventEngine(
             wl, SimParams(mode=rec.spec.mode,
                           ocs_latency=self.params.ocs_latency,
@@ -422,22 +439,29 @@ CATALOG: Tuple[Tuple[str, int, int], ...] = (
 
 def catalog_jobs(n_jobs: int, ranks_per_job: int, *, mean_gap: float = 5.0,
                  seed: int = 1, seq_len: int = 4096,
-                 mode: str = "opus_prov") -> List[ClusterJobSpec]:
+                 mode: str = "opus_prov",
+                 workload: str = "train") -> List[ClusterJobSpec]:
     """The i-th cluster tenant, deterministically: cycle the CATALOG
     templates over a :func:`exp_trace` arrival trace (first arrival
-    pinned to t=0 so the cluster never idles at the front)."""
+    pinned to t=0 so the cluster never idles at the front).
+
+    ``workload`` stamps every tenant (``train`` default; the serving
+    kinds collapse the mesh to TP x FSDP — pipeline stages make no sense
+    for a serving replica, the ranks all become scale-out ways)."""
     from repro.configs.base import get_config
     arrivals = [0.0] + exp_trace(max(n_jobs - 1, 0), mean_gap, seed)
     specs = []
     for i in range(n_jobs):
         model_name, tp, pp = CATALOG[i % len(CATALOG)]
+        if workload != "train":
+            pp = 1
         assert ranks_per_job % pp == 0, (ranks_per_job, pp)
         fsdp = ranks_per_job // pp
         job = ph.JobConfig(model=get_config(model_name), tp=tp, fsdp=fsdp,
                            pp=pp, global_batch=16 * fsdp, seq_len=seq_len,
                            n_microbatch=pp)
         specs.append(ClusterJobSpec(f"job{i}", job, arrival=arrivals[i],
-                                    mode=mode))
+                                    mode=mode, workload=workload))
     return specs
 
 

@@ -59,7 +59,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core import phases as ph
 from repro.core.fabricspec import FabricSpec
-from repro.core.plane import ControlPlane
+from repro.core.plane import ControlPlane, build_placement
 from repro.core.shim import DEFAULT, PROVISIONING, STATIC
 from repro.core.windows import TimedOp, Window, windows_of
 from repro.sim.workload import TimedWorkload
@@ -542,8 +542,20 @@ def mesh_plane_profile(model_cfg, axis_sizes: Dict[str, int], *,
     nat = simulate(wl, SimParams(mode="native")).step_time
     r = simulate(wl, SimParams(mode="opus_prov", ocs_latency=ocs_latency))
     m = r.telemetry["measured"]   # steady-state per-iteration counters
+    # the job's ACTUAL rail mapping, from the same placement the
+    # orchestrators program: a TP-only mesh (fsdp == 1) still owns one
+    # port per rail but never drives it — report that honestly instead
+    # of an all-zero table with no rail information at all
+    placement = build_placement(job)
+    ports = sorted(placement.all_ports)
     return {
         "tp": tp, "fsdp": dp, "gpu": gpu,
+        "rail_mapping": {
+            "scale_up_axis": "model", "scale_up_ways": tp,
+            "scale_out_ranks": len(ports),   # ports owned on EVERY rail
+            "ports_per_rail": ports,
+            "rail_silent": dp == 1,          # no scale-out collectives
+        },
         "ocs_latency_s": ocs_latency,
         "modeled_step_s": round(r.step_time, 6),
         # TP-only job (fsdp == 1): no scale-out traffic, nothing to compare

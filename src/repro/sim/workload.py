@@ -8,7 +8,7 @@ follow the paper's evaluation platforms (§5).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from repro.configs.base import ModelConfig
 from repro.core.phases import CommOp, JobConfig, iteration_schedule
@@ -22,17 +22,20 @@ class GPUSpec:
     scale_out_gbps: float   # per-GPU NIC bandwidth (one direction)
     scale_up_gbps: float    # per-GPU intra-domain bandwidth
     domain: int             # GPUs per scale-up domain
+    tdp_w: float = 700.0    # board power (context for the fleet req/s-per-W)
 
 
 GPUS: Dict[str, GPUSpec] = {
     # Perlmutter node: 4x A100, Slingshot-11 (200 Gb/s per NIC), NVLink3
-    "a100": GPUSpec("a100", 312e12, 0.35, 200.0, 1600.0, 4),
+    "a100": GPUSpec("a100", 312e12, 0.35, 200.0, 1600.0, 4, tdp_w=400.0),
     # DGX H200: 8 GPUs, CX-7 400 Gb/s, NVLink4
-    "h200": GPUSpec("h200", 989e12, 0.40, 400.0, 3600.0, 8),
+    "h200": GPUSpec("h200", 989e12, 0.40, 400.0, 3600.0, 8, tdp_w=700.0),
     # GB200 NVL72: 800 Gb/s scale-out per GPU (paper §5.3)
-    "gb200": GPUSpec("gb200", 2500e12, 0.40, 800.0, 14400.0, 8),
+    "gb200": GPUSpec("gb200", 2500e12, 0.40, 800.0, 14400.0, 8,
+                     tdp_w=1200.0),
     # TPU v5e-like (for the dry-run cross-checks)
-    "tpu_v5e": GPUSpec("tpu_v5e", 197e12, 0.45, 400.0, 1600.0, 16),
+    "tpu_v5e": GPUSpec("tpu_v5e", 197e12, 0.45, 400.0, 1600.0, 16,
+                       tdp_w=220.0),
 }
 
 
@@ -82,3 +85,28 @@ def build(job: JobConfig, gpu_name: str) -> TimedWorkload:
     t_bwd = 2.0 * t_fwd
     ops = iteration_schedule(job, t_fwd_layer=t_fwd, t_bwd_layer=t_bwd)
     return TimedWorkload(job, gpu, ops, t_fwd, t_bwd)
+
+
+def build_serving(job: JobConfig, gpu_name: str, kind: str, *,
+                  batch_slots: int = 1,
+                  prompt_tokens: Optional[int] = None) -> TimedWorkload:
+    """Timed workload of ONE serving step (DESIGN.md §11).
+
+    ``kind`` selects the serve/step.py shape: ``"prefill"`` processes one
+    request's prompt (``prompt_tokens``, default ``job.seq_len``) through
+    the forward with per-layer FSDP parameter AllGathers; ``"decode"``
+    advances ``batch_slots`` resident sequences one token with per-layer
+    activation AllReduces.  The returned workload is what the event
+    engine replays to measure a replica's step time — the serving fleet
+    is a strict superset of ``simulate(engine="event")``, never a fork.
+    """
+    from repro.core.phases import serving_schedule
+    gpu = GPUS[gpu_name]
+    if kind == "prefill":
+        tokens = prompt_tokens if prompt_tokens is not None else job.seq_len
+    else:
+        tokens = batch_slots          # one token per resident slot
+    t_layer = layer_flops(job.model, tokens) / job.tp / (gpu.flops * gpu.mfu)
+    ops = serving_schedule(job, kind, batch_slots=batch_slots,
+                           t_layer=t_layer)
+    return TimedWorkload(job, gpu, ops, t_layer, 0.0)

@@ -348,3 +348,37 @@ def test_cluster_benchmark_record_shape():
     assert s["total_gpus"] >= 1024
     assert isinstance(s["rails"]["n_queued_programs"], int)
     assert not math.isnan(s["mean_overhead_vs_native"])
+
+
+def test_workload_kind_is_a_spec_field():
+    """A cluster mix can include serving tenants (DESIGN.md §11): the
+    workload kind rides on ClusterJobSpec without changing any default —
+    train specs behave exactly as before."""
+    assert ClusterJobSpec("t", SMALL).workload == "train"
+    serve_job = JobConfig(model=CFG.replace(n_layers=4), tp=2, fsdp=4,
+                          pp=1, global_batch=32, seq_len=2048)
+    specs = [
+        ClusterJobSpec("train0", SMALL, arrival=0.0),
+        ClusterJobSpec("pre0", serve_job, arrival=0.5,
+                       workload="serve_prefill"),
+        ClusterJobSpec("dec0", serve_job, arrival=1.0,
+                       workload="serve_decode", batch_slots=8),
+    ]
+    res = simulate_cluster(specs, ClusterParams(n_ports=24,
+                                                ocs_latency=0.005))
+    by = {r.spec.name: r for r in res.jobs}
+    assert all(r.status == "done" for r in res.jobs)
+    # serving tenants are single-phase: zero steady-state reconfigs on
+    # the SHARED rails, while the training tenant reconfigures as usual
+    assert by["pre0"].result.n_reconfigs == 0
+    assert by["dec0"].result.n_reconfigs == 0
+    assert by["train0"].result.n_reconfigs > 0
+    assert by["dec0"].result.step_time < by["pre0"].result.step_time
+    # a serving tenant never carries pipeline stages
+    with pytest.raises(AssertionError, match="TP x FSDP"):
+        ClusterJobSpec("bad", SMALL, workload="serve_decode")
+    # catalog generalization: serving catalogs collapse pp into fsdp
+    sspecs = catalog_jobs(3, 16, workload="serve_decode")
+    assert all(sp.workload == "serve_decode" and sp.job.pp == 1
+               for sp in sspecs)
+    assert all(sp.n_ranks == 16 for sp in sspecs)

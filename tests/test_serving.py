@@ -1,0 +1,357 @@
+"""Serving-fleet simulator (DESIGN.md §11): deterministic traces,
+serving schedules, single-replica bit-exactness against the single-job
+event engine, autoscaling port churn (including a mid-drain persistent
+OCS fault), KV-migration rail accounting, and the fleet-level
+OCS-vs-packet acceptance point."""
+import time
+
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.orchestrator import PortAllocator, RailOrchestrator
+from repro.core.phases import (JobConfig, decode_ar_bytes, fsdp_ag_bytes,
+                               serving_schedule)
+from repro.sim.opus_sim import SimParams, simulate
+from repro.sim.serving import (FleetParams, PoolSpec, RequestRecord,
+                               ServingFleet, kv_bytes_per_token,
+                               simulate_fleet)
+from repro.sim.traces import (LCG, Request, TraceParams, make_trace,
+                              trace_stats)
+from repro.sim.workload import build_serving
+
+CFG = get_config("llama3_8b")
+SMALL = CFG.replace(n_layers=4)
+JOB = JobConfig(model=SMALL, tp=2, fsdp=4, pp=1, global_batch=32,
+                seq_len=2048)                     # 4 scale-out ranks
+
+
+def mini_pools(**kw):
+    prefill = PoolSpec(JOB, min_replicas=kw.pop("min_prefill", 1),
+                       max_replicas=kw.pop("max_prefill", 4),
+                       ref_prompt_tokens=1024)
+    decode = PoolSpec(JOB, min_replicas=kw.pop("min_decode", 1),
+                      max_replicas=kw.pop("max_decode", 4),
+                      batch_slots=kw.pop("slots", 4))
+    return prefill, decode
+
+
+def mini_params(**kw):
+    kw.setdefault("n_ports", 48)
+    kw.setdefault("backend", "crossbar_ocs")
+    kw.setdefault("ocs_latency", 0.005)
+    kw.setdefault("handoff_interval_s", 0.05)
+    return FleetParams(**kw)
+
+
+# ---------------------------------------------------------------------------
+# traces
+# ---------------------------------------------------------------------------
+
+
+def test_trace_deterministic_and_shaped():
+    tp = TraceParams(duration_s=40.0, base_rate=8.0, diurnal_amp=0.5,
+                     diurnal_period_s=40.0, bursts=((10.0, 5.0, 3.0),),
+                     seed=7)
+    a, b = make_trace(tp), make_trace(tp)
+    assert a == b                                 # bit-identical
+    assert all(0 <= r.arrival < tp.duration_s for r in a)
+    assert all(r.prompt_tokens >= tp.min_prompt_tokens for r in a)
+    assert all(r.decode_tokens <= tp.max_decode_tokens for r in a)
+    st = trace_stats(a, tp, window_s=5.0)
+    counts = dict(st.windows)
+    # the burst window [10, 15) must dominate the quiet back half
+    assert counts[10.0] > 2 * counts[30.0]
+    assert st.n_requests == len(a)
+
+
+def test_trace_rate_envelope_and_lcg_bounds():
+    tp = TraceParams(duration_s=10.0, base_rate=5.0, diurnal_amp=0.25,
+                     bursts=((2.0, 1.0, 2.0),))
+    assert tp.peak_rate == pytest.approx(5.0 * 1.25 * 2.0)
+    assert tp.rate_at(2.5) == pytest.approx(
+        2.0 * 5.0 * (1.0 + 0.25 * __import__("math").sin(
+            2 * __import__("math").pi * 2.5 / tp.diurnal_period_s)))
+    rng = LCG(1)
+    for _ in range(1000):
+        u = rng.uniform()
+        assert 0.0 < u < 1.0
+
+
+# ---------------------------------------------------------------------------
+# serving schedules
+# ---------------------------------------------------------------------------
+
+
+def test_serving_schedule_shapes():
+    pre = serving_schedule(JOB, "prefill", t_layer=1e-3)
+    dec = serving_schedule(JOB, "decode", batch_slots=8, t_layer=1e-4)
+    assert len(pre) == len(dec) == SMALL.n_layers
+    assert all(op.kind == "all_gather" and op.dim == "fsdp" for op in pre)
+    assert all(op.kind == "all_reduce" for op in dec)
+    assert pre[0].bytes_per_gpu == fsdp_ag_bytes(JOB)
+    assert dec[0].bytes_per_gpu == decode_ar_bytes(JOB, 8)
+    # decode bytes are activation-sized: orders of magnitude under prefill
+    assert dec[0].bytes_per_gpu < pre[0].bytes_per_gpu / 100
+
+
+def test_tp_only_replica_is_rail_silent_but_timed():
+    tp_job = JobConfig(model=SMALL, tp=8, fsdp=1, pp=1, global_batch=8,
+                      seq_len=2048)
+    ops = serving_schedule(tp_job, "decode", t_layer=1e-3)
+    assert all(op.scale == "scale_up" and op.bytes_per_gpu == 0.0
+               for op in ops)
+    wl = build_serving(tp_job, "h200", "decode", batch_slots=4)
+    r = simulate(wl, SimParams(mode="oneshot"), engine="event")
+    assert r.step_time == pytest.approx(SMALL.n_layers * wl.t_fwd_layer)
+    assert r.n_reconfigs == 0 and r.n_topo_writes == 0
+
+
+def test_kv_bytes_attention_free_is_zero():
+    mamba = get_config("mamba2_370m")
+    if mamba.n_heads == 0:
+        assert kv_bytes_per_token(mamba) == 0.0
+    assert kv_bytes_per_token(SMALL) == \
+        SMALL.n_layers * 2 * SMALL.n_kv_heads * SMALL.resolved_head_dim * 2
+
+
+# ---------------------------------------------------------------------------
+# single static replica == simulate(engine="event")  (satellite: the
+# serving engine is a strict superset, not a fork)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend,mode", [("crossbar_ocs", "oneshot"),
+                                          ("crossbar_ocs", "opus_prov"),
+                                          ("packet", "oneshot")])
+@pytest.mark.parametrize("kind", ["prefill", "decode"])
+def test_single_static_replica_bit_exact(backend, mode, kind):
+    pool = PoolSpec(JOB, min_replicas=1, max_replicas=1, batch_slots=4,
+                    ref_prompt_tokens=1024, mode=mode)
+    params = mini_params(backend=backend)
+    fleet = ServingFleet(params, pool, pool, [])   # no arrivals
+    res = fleet.run()
+    rep = [r for r in res.replicas if r.kind == kind][0]
+    wl = build_serving(JOB, params.gpu, kind, batch_slots=4,
+                       prompt_tokens=1024)
+    ref = simulate(wl, params.sim_params(mode), engine="event")
+    assert rep.result.step_time == ref.step_time   # BIT-exact, not approx
+    assert rep.result.n_reconfigs == ref.n_reconfigs == 0
+
+
+# ---------------------------------------------------------------------------
+# autoscaling port churn (satellite: acquire -> release -> re-acquire)
+# ---------------------------------------------------------------------------
+
+
+def churny_trace():
+    """Two bursts with a quiet valley: up, down, up again."""
+    return TraceParams(duration_s=30.0, base_rate=6.0, diurnal_amp=0.3,
+                       diurnal_period_s=30.0,
+                       bursts=((4.0, 4.0, 3.0), (20.0, 4.0, 3.0)),
+                       mean_prompt_tokens=1024, max_prompt_tokens=2048,
+                       mean_decode_tokens=64, max_decode_tokens=128,
+                       seed=11)
+
+
+def test_autoscale_port_churn_telemetry_consistent():
+    prefill, decode = mini_pools(max_prefill=5, max_decode=5)
+    params = mini_params()
+    fleet = ServingFleet(params, prefill, decode, make_trace(churny_trace()))
+    res = fleet.run()
+    s = res.summary()
+    assert s["n_completed"] == s["n_requests"] > 50
+    # churn actually happened: ups beyond the minimums AND downs
+    assert s["n_scale_ups"] > 2 and s["n_scale_downs"] > 0
+    # allocator books balance: every admission was one allocation, and
+    # what is still granted is exactly the still-live replicas' ports
+    assert fleet.allocator.n_allocations == s["n_scale_ups"]
+    live = [r for r in res.replicas if r.status != "released"]
+    assert set(fleet.allocator.grants) == {r.name for r in live}
+    assert fleet.allocator.stats()["ports_in_use"] == \
+        sum(len(r.ports) for r in live)
+    # released ports were RE-acquired by later replicas (first-fit reuse)
+    released = [r for r in res.replicas if r.status == "released"]
+    assert released
+    reused = any(set(a.ports) & set(b.ports)
+                 for a in released for b in res.replicas
+                 if b.admitted > (a.released or 0.0))
+    assert reused
+    # every sampled utilization/fragmentation stayed in range
+    for ev in fleet.events:
+        assert 0.0 <= ev["utilization"] <= 1.0
+        assert 0.0 <= ev["fragmentation"] <= 1.0
+
+
+def test_fleet_deterministic():
+    prefill, decode = mini_pools()
+    params = mini_params()
+    tr = make_trace(churny_trace())
+    s1 = ServingFleet(params, prefill, decode, tr).run().summary()
+    s2 = ServingFleet(params, prefill, decode, tr).run().summary()
+    assert s1 == s2
+
+
+def test_mid_drain_persistent_fault_churn():
+    """A decode replica under a persistent OCS fault is drained while
+    holding resident KV: the migration cannot wire circuits so the KV is
+    relayed, the release still returns its ports, and a later replica
+    re-acquires them — ownership asserts hold on the fault path too."""
+    prefill, decode = mini_pools()
+    params = mini_params()
+    fleet = ServingFleet(params, prefill, decode, [])
+    healthy = fleet._admit("decode", 0.0)
+    fleet.ocs_fail["decode1"] = lambda attempt: True   # persistent
+    faulted = fleet._admit("decode", 0.0)
+    # park one resident request on the faulted replica
+    rec = RequestRecord(Request(0, 0.0, 512, 64))
+    rec.first_token, rec.replica = 1.0, faulted.name
+    fleet.records.append(rec)
+    faulted.active = 1
+    used0 = fleet.allocator.stats()["ports_in_use"]
+    frag0 = fleet.allocator.fragmentation()
+    fleet._drain_one([faulted], 2.0)                  # mid-drain migration
+    assert fleet.n_drain_migrations == 1
+    assert fleet.n_handoff_relays == len(faulted.ports)  # fault -> relay
+    assert faulted.status == "released"
+    assert rec.replica == healthy.name and healthy.active == 1
+    assert fleet.allocator.stats()["ports_in_use"] == used0 - len(
+        faulted.ports)
+    for rail in fleet.rails:                          # ports really freed
+        assert not (set(faulted.ports) & set(rail.port_owner))
+    # re-acquire: first-fit hands the freed ports back to the next
+    # replica, restoring utilization AND fragmentation telemetry exactly
+    again = fleet._admit("decode", 3.0)
+    assert again is not None and again.ports == faulted.ports
+    assert fleet.allocator.stats()["ports_in_use"] == used0
+    assert fleet.allocator.fragmentation() == frag0
+
+
+def test_migrate_rejects_foreign_ports():
+    rail = RailOrchestrator(0, FleetParams(n_ports=16).fabric_spec()
+                            .make_backend(16))
+    alloc = PortAllocator(16)
+    from repro.core.plane import ControlPlane
+    from repro.sim.opus_sim import SHIM_MODE
+    spec = FleetParams(n_ports=16).fabric_spec()
+    g1 = alloc.allocate("a", 4)
+    g2 = alloc.allocate("b", 4)
+    for name, g in (("a", g1), ("b", g2)):
+        ControlPlane(JOB, mode=SHIM_MODE["oneshot"], job_id=name,
+                     spec=spec, collapse=True, orchestrators=[rail],
+                     ports=g, now=0.0)
+    with pytest.raises(AssertionError, match="foreign"):
+        rail.migrate([("a", "b", (12, 13, 14, 15), g2)], 0.0)
+    with pytest.raises(AssertionError, match="never touches"):
+        rail.migrate([("a", "a", g1, g1)], 0.0)
+    # a sanctioned handoff wires circuits and restore reinstates rings
+    # (now = 1.0: past the registration programs' switch-busy window)
+    tk = rail.migrate([("a", "b", g1, g2)], 1.0)
+    assert tk.n_circuits == 4 and tk.n_relayed == 0
+    assert tk.done == pytest.approx(1.0 + spec.reconfig_latency)
+    for a, b in zip(g1, g2):
+        assert rail.ocs.connected(a) == b
+    rail.restore(["a"], tk.done)
+    ring = {p for sm in rail.jobs["a"].submaps.values()
+            for pair in sm.pairs for p in pair}
+    assert ring <= set(g1)
+    assert all(rail.ocs.connected(a) != b or a == b
+               for a, b in zip(g1, g2))
+
+
+def test_ocs_array_cross_sub_handoffs_are_relayed():
+    """radix == replica size: every replica owns exactly one sub-switch,
+    so every KV handoff spans sub-switches and is relayed, never wired."""
+    prefill, decode = mini_pools(min_prefill=1, min_decode=1)
+    params = mini_params(backend="ocs_array", radix=4, n_ports=48)
+    tr = TraceParams(duration_s=10.0, base_rate=4.0,
+                     mean_prompt_tokens=512, max_prompt_tokens=1024,
+                     mean_decode_tokens=32, max_decode_tokens=64, seed=5)
+    res = ServingFleet(params, prefill, decode, make_trace(tr)).run()
+    s = res.summary()
+    assert s["n_completed"] == s["n_requests"] > 0
+    assert s["n_handoff_relays"] > 0
+    assert s["n_handoff_circuits"] == 0
+
+
+def test_packet_fleet_routes_without_programs():
+    prefill, decode = mini_pools()
+    params = mini_params(backend="packet")
+    tr = TraceParams(duration_s=10.0, base_rate=4.0,
+                     mean_prompt_tokens=512, max_prompt_tokens=1024,
+                     mean_decode_tokens=32, max_decode_tokens=64, seed=5)
+    res = ServingFleet(params, prefill, decode, make_trace(tr)).run()
+    s = res.summary()
+    assert s["n_completed"] == s["n_requests"] > 0
+    assert s["rails"]["n_program_calls"] == 0      # nothing to program
+    assert s["n_handoff_flushes"] == 0             # routed, not flushed
+    # every handoff relays each of the replica's port pairs
+    assert s["n_handoff_relays"] == JOB.fsdp * s["n_completed"]
+
+
+# ---------------------------------------------------------------------------
+# serve/train --plane-report parity (TP-only rail mapping)
+# ---------------------------------------------------------------------------
+
+
+def test_serve_train_plane_report_parity(capsys):
+    pytest.importorskip("jax")
+    from repro.launch.train import parse_mesh, plane_report
+    from repro.sim.opus_sim import mesh_plane_profile
+    cfg = get_config("llama3_8b", smoke=True)
+    mesh = parse_mesh("1x8")                # TP-only decode mesh
+    p_train = plane_report(cfg, mesh, 64, 512, 0.01)
+    out = capsys.readouterr().out
+    # the fix: a TP-only mesh reports its ACTUAL rail mapping instead of
+    # an all-zero table with no rail information
+    assert "rail mapping" in out and "rail-silent" in out
+    assert p_train["rail_mapping"] == {
+        "scale_up_axis": "model", "scale_up_ways": 8,
+        "scale_out_ranks": 1, "ports_per_rail": [0], "rail_silent": True}
+    # launch/serve.py --plane-report delegates to the SAME plane_report;
+    # parity = the underlying profile agrees on the same mesh mapping
+    ax = dict(zip(mesh.axis_names, mesh.devices.shape))
+    p_serve = mesh_plane_profile(cfg, ax, global_batch=64, seq_len=512,
+                                 ocs_latency=0.01)
+    assert p_serve == p_train
+    # and a mixed mesh maps its scale-out ways onto rail ports
+    p_mixed = plane_report(cfg, parse_mesh("4x2"), 64, 512, 0.01)
+    capsys.readouterr()
+    rm = p_mixed["rail_mapping"]
+    assert rm["scale_out_ranks"] == 4 and rm["ports_per_rail"] == [0, 1, 2, 3]
+    assert rm["rail_silent"] is False
+
+
+# ---------------------------------------------------------------------------
+# the fleet-level acceptance point (ISSUE: >= 16 replicas, ~1k GPUs,
+# < 10 s, paper-style power win at < 6% serving-latency overhead)
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_acceptance_ocs_vs_packet():
+    model = get_config("llama_80b")
+    job = JobConfig(model=model, tp=8, fsdp=8, pp=1, global_batch=64,
+                    seq_len=4096, n_microbatch=1)
+    prefill = PoolSpec(job, min_replicas=8, max_replicas=16,
+                       ref_prompt_tokens=2048)
+    decode = PoolSpec(job, min_replicas=3, max_replicas=8, batch_slots=16)
+    tr = TraceParams(duration_s=60.0, base_rate=14.0, diurnal_amp=0.4,
+                     diurnal_period_s=60.0, bursts=((20.0, 10.0, 1.5),),
+                     seed=3)
+    out = {}
+    t0 = time.time()
+    for backend in ("crossbar_ocs", "packet"):
+        params = FleetParams(n_ports=2048, backend=backend,
+                             ocs_latency=0.01)
+        out[backend] = simulate_fleet(params, prefill, decode,
+                                      tr).summary()
+    wall = time.time() - t0
+    assert wall < 10.0, f"fleet sweep took {wall:.1f}s"
+    ocs, pkt = out["crossbar_ocs"], out["packet"]
+    assert ocs["peak_replicas"] >= 16 and ocs["peak_gpus"] >= 1024
+    assert ocs["n_completed"] == ocs["n_requests"]
+    # the paper-style serving tradeoff: an order of magnitude less
+    # network power, within 6% of the packet fabric's p99 TTFT
+    assert pkt["network_power_w"] / ocs["network_power_w"] > 5.0
+    assert ocs["rps_per_net_kw"] > 5.0 * pkt["rps_per_net_kw"]
+    assert ocs["p99_ttft_s"] / pkt["p99_ttft_s"] < 1.06
+    assert ocs["throughput_rps"] == pkt["throughput_rps"]
