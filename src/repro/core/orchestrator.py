@@ -200,11 +200,24 @@ class RailOrchestrator:
         """
         pairs: List[Tuple[int, int]] = []
         src_jobs: List[str] = []
+        seen_src: set = set()
         for src_job, dst_job, src_ports, dst_ports in handoffs:
             self._assert_owned(src_job, src_ports)
             self._assert_owned(dst_job, dst_ports)
             assert src_job != dst_job, \
                 f"self-migration for {src_job!r} never touches the rails"
+            assert len(src_ports) == len(dst_ports), \
+                f"handoff {src_job!r}->{dst_job!r} pairs " \
+                f"{len(src_ports)} source ports with {len(dst_ports)} " \
+                f"destination ports (trim to rank pairs at the call site)"
+            # a port holds one circuit: the same source port named by two
+            # handoff entries of one program is a caller bug that would
+            # otherwise surface as a deep backend conflict mid-program
+            dup = sorted(p for p in src_ports if p in seen_src)
+            assert not dup, \
+                f"source ports {dup} appear in multiple handoffs of one " \
+                f"migration program"
+            seen_src.update(src_ports)
             pairs.extend(zip(src_ports, dst_ports))
             src_jobs.append(src_job)
         if not pairs:
@@ -224,9 +237,12 @@ class RailOrchestrator:
             st.n_reconfig_events += 1
             self._programmed(st, 0)
         # ports are billed once, to the batch (not per tenant): split the
-        # count over the participating sources deterministically
+        # count over the participating sources deterministically, the
+        # remainder going to the batch's first source
         n_ports = len(disco) + len(wired)
-        self.jobs[src_jobs[0]].n_ports_programmed += n_ports
+        base, rem = divmod(n_ports, len(src_jobs))
+        for i, j in enumerate(src_jobs):
+            self.jobs[j].n_ports_programmed += base + (1 if i < rem else 0)
         done = self.ocs.program(disco, wired, now)
         return MigrationTicket(done, len(wired), relayed)
 

@@ -232,6 +232,7 @@ class ServingFleet:
         self._counter = {"prefill": 0, "decode": 0}
         self._seq = 0
         self._heap: List[Tuple[float, int, str, object]] = []
+        self._wakeups: set = set()     # scheduled dispatch-retry times
         self._ran = False
 
     # -- substrate ----------------------------------------------------------
@@ -247,6 +248,17 @@ class ServingFleet:
             per_t = kv_bytes_per_token(self.decode_pool.job.model)
         total = per_t * tokens / max(self.decode_pool.job.tp, 1)
         return total * 8.0 / (self.gpu.scale_out_gbps * 1e9 * bw_factor)
+
+    def _handoff_ports(self, src: Replica, dst: Replica
+                       ) -> Tuple[Tuple[int, ...], Tuple[int, ...], int]:
+        """Circuit endpoints for one src->dst handoff: rank i wires to
+        rank i.  When the pools' fsdp sizes differ only ``min(n)`` pairs
+        can hold circuits — the unpaired ranks' KV slices hop through a
+        wired peer instead, returned as a relay count (never silently
+        truncated: migrate() asserts equal-length port tuples)."""
+        k = min(len(src.ports), len(dst.ports))
+        extra = max(len(src.ports), len(dst.ports)) - k
+        return src.ports[:k], dst.ports[:k], extra
 
     def _wired(self, src: Replica, dst: Replica) -> bool:
         """Can a (src, dst) handoff pair hold a direct circuit?"""
@@ -350,6 +362,9 @@ class ServingFleet:
                 self._prefill_done(t, *payload)
             elif kind == "decode_done":
                 self._decode_done(t, *payload)
+            elif kind == "dispatch":
+                self._wakeups.discard(t)
+                self._dispatch_prefill(t)
             elif kind == "flush":
                 self._flush(t)
             elif kind == "scale":
@@ -360,12 +375,17 @@ class ServingFleet:
     def _dispatch_prefill(self, t: float) -> None:
         if t > self.horizon:
             return
+        wake: Optional[float] = None
         for rep in self._live("prefill"):
             if not self.prefill_queue:
                 return
             start = max(t, rep.busy_until, rep.ready)
             if start > t:
-                continue                     # busy; frees via prefill_done
+                # busy (serializing, handoff phase) or still warming up:
+                # remember when it frees so queued requests start THEN,
+                # not at the next unrelated arrival/flush/scale event
+                wake = start if wake is None else min(wake, start)
+                continue
             idx = self.prefill_queue.pop(0)
             rec = self.records[idx]
             rec.prefill_start = start
@@ -373,6 +393,10 @@ class ServingFleet:
             rep.busy_until = start + dur
             rep.n_prefills += 1
             self._push(start + dur, "prefill_done", (idx, rep.name))
+        if self.prefill_queue and wake is not None \
+                and wake <= self.horizon and wake not in self._wakeups:
+            self._wakeups.add(wake)
+            self._push(wake, "dispatch")
 
     def _replica(self, name: str) -> Replica:
         for r in self.replicas:
@@ -397,10 +421,10 @@ class ServingFleet:
             return
         rec = self.records[idx]
         src = self._replica(src_name)
+        sp, dp, extra = self._handoff_ports(src, dst)
         for rail in self.rails:   # accounting + ownership asserts only
-            tk = rail.migrate([(src.name, dst.name, src.ports, dst.ports)],
-                              t)
-        self.n_handoff_relays += tk.n_relayed
+            tk = rail.migrate([(src.name, dst.name, sp, dp)], t)
+        self.n_handoff_relays += tk.n_relayed + extra
         first = t + self._kv_transfer_s(rec.req.prompt_tokens)
         self._start_decode(first, idx, dst)
 
@@ -418,8 +442,24 @@ class ServingFleet:
         assigns: List[Tuple[int, Replica, Replica]] = []
         if self.outbox:
             free: Dict[str, int] = {}
+            # each source holds ONE handoff circuit per flush phase (its
+            # ports are wired to exactly one destination — the same port
+            # cannot hold two circuits, and migrate() rejects a program
+            # that names a source port twice), so a source's entries all
+            # stream to its pinned destination; overflow past that
+            # destination's slots waits for the next flush
+            pinned: Dict[str, str] = {}
             remaining: List[Tuple[int, str]] = []
             for idx, src_name in self.outbox:
+                pin = pinned.get(src_name)
+                if pin is not None:
+                    if free[pin] > 0:
+                        free[pin] -= 1
+                        assigns.append((idx, self._replica(src_name),
+                                        self._replica(pin)))
+                    else:
+                        remaining.append((idx, src_name))
+                    continue
                 dst = None
                 for rep in self._live("decode", ready_by=t):
                     slots = free.setdefault(rep.name, rep.free_slots)
@@ -431,6 +471,7 @@ class ServingFleet:
                     remaining.append((idx, src_name))
                     continue
                 free[dst.name] -= 1
+                pinned[src_name] = dst.name
                 assigns.append((idx, self._replica(src_name), dst))
             self.outbox = remaining
         if assigns:
@@ -439,8 +480,12 @@ class ServingFleet:
             groups: Dict[Tuple[str, str], List[int]] = {}
             for idx, src, dst in assigns:
                 groups.setdefault((src.name, dst.name), []).append(idx)
-            handoffs = [(s, d, self._replica(s).ports,
-                         self._replica(d).ports) for s, d in groups]
+            handoffs = []
+            for s, d in groups:
+                sp, dp, extra = self._handoff_ports(self._replica(s),
+                                                    self._replica(d))
+                handoffs.append((s, d, sp, dp))
+                self.n_handoff_relays += extra
             done = t
             for rail in self.rails:
                 tk = rail.migrate(handoffs, t)
@@ -575,12 +620,11 @@ class ServingFleet:
                 self.n_handoff_relays += len(victim.ports)
                 bwf = self.params.relay_bw_factor
             else:
+                sp, dp, extra = self._handoff_ports(victim, dst)
                 for rail in self.rails:
-                    tk = rail.migrate(
-                        [(victim.name, dst.name, victim.ports,
-                          dst.ports)], t)
+                    tk = rail.migrate([(victim.name, dst.name, sp, dp)], t)
                     done = max(done, tk.done)
-                self.n_handoff_relays += tk.n_relayed
+                self.n_handoff_relays += tk.n_relayed + extra
             self.n_drain_migrations += 1
             # resident KV = prompt + tokens generated so far (~half)
             done += self._kv_transfer_s(rec.req.prompt_tokens

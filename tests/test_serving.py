@@ -226,6 +226,99 @@ def test_mid_drain_persistent_fault_churn():
     assert fleet.allocator.fragmentation() == frag0
 
 
+def test_flush_same_source_two_destinations_pins_one_circuit():
+    """Two finished prefills from ONE source replica with two half-free
+    decode replicas live: the flush must not wire the source's ports into
+    two circuits of one program (a port holds one circuit — this used to
+    crash the backend with 'port already connected').  The source pins
+    one destination and its handoffs stream serially over that circuit."""
+    prefill = PoolSpec(JOB, min_replicas=1, max_replicas=4,
+                       ref_prompt_tokens=1024)
+    decode = PoolSpec(JOB, min_replicas=2, max_replicas=4, batch_slots=4)
+    params = mini_params(handoff_interval_s=0.3)
+    trace = [Request(0, 0.001, 64, 16), Request(1, 0.002, 64, 16)]
+    res = ServingFleet(params, prefill, decode, trace).run()
+    s = res.summary()
+    assert s["n_completed"] == s["n_requests"] == 2
+    # one flush, one (src, dst) circuit group: fsdp pairs, not 2x fsdp
+    assert s["n_handoff_flushes"] == 1
+    assert s["n_handoff_circuits"] == JOB.fsdp
+    # both requests decode on the SAME pinned destination
+    homes = {r.replica for r in res.records}
+    assert len(homes) == 1
+
+
+def test_migrate_rejects_duplicate_and_mismatched_ports():
+    rail = RailOrchestrator(0, FleetParams(n_ports=16).fabric_spec()
+                            .make_backend(16))
+    alloc = PortAllocator(16)
+    from repro.core.plane import ControlPlane
+    from repro.sim.opus_sim import SHIM_MODE
+    spec = FleetParams(n_ports=16).fabric_spec()
+    grants = {}
+    for name in ("a", "b", "c"):
+        grants[name] = alloc.allocate(name, 4)
+        ControlPlane(JOB, mode=SHIM_MODE["oneshot"], job_id=name,
+                     spec=spec, collapse=True, orchestrators=[rail],
+                     ports=grants[name], now=0.0)
+    # the same source ports in two handoff entries of one program
+    with pytest.raises(AssertionError, match="multiple handoffs"):
+        rail.migrate([("a", "b", grants["a"], grants["b"]),
+                      ("a", "c", grants["a"], grants["c"])], 1.0)
+    # mismatched rank counts never truncate silently
+    with pytest.raises(AssertionError, match="pairs 2 source ports"):
+        rail.migrate([("a", "b", grants["a"][:2], grants["b"])], 1.0)
+
+
+def test_migrate_splits_port_billing_over_sources():
+    """A batched migration's programmed-port count is split across the
+    participating source tenants (remainder to the first), so per-job
+    telemetry is not skewed toward whichever source is first."""
+    rail = RailOrchestrator(0, FleetParams(n_ports=32).fabric_spec()
+                            .make_backend(32))
+    alloc = PortAllocator(32)
+    from repro.core.plane import ControlPlane
+    from repro.sim.opus_sim import SHIM_MODE
+    spec = FleetParams(n_ports=32).fabric_spec()
+    grants = {}
+    for name in ("a", "b", "d"):
+        grants[name] = alloc.allocate(name, 4)
+        ControlPlane(JOB, mode=SHIM_MODE["oneshot"], job_id=name,
+                     spec=spec, collapse=True, orchestrators=[rail],
+                     ports=grants[name], now=0.0)
+    before = {n: rail.job_stats(n)["n_ports_programmed"]
+              for n in ("a", "b", "d")}
+    ocs_before = rail.ocs.n_ports_programmed
+    rail.migrate([("a", "d", grants["a"], grants["d"]),
+                  ("b", "d", grants["b"], grants["d"])], 1.0)
+    billed = {n: rail.job_stats(n)["n_ports_programmed"] - before[n]
+              for n in ("a", "b", "d")}
+    program_ports = rail.ocs.n_ports_programmed - ocs_before
+    # the whole program is billed once, split evenly over the two
+    # sources; the destination (a mere recipient) is billed nothing
+    assert billed["d"] == 0
+    assert billed["a"] + billed["b"] == program_ports > 0
+    assert billed["a"] == billed["b"]
+
+
+def test_queued_prefill_dispatches_when_replica_frees():
+    """A request that arrives while every prefill replica is busy must
+    start the moment one frees — not wait for the next arrival, flush,
+    or autoscaler tick (it used to wait up to scale_interval_s on the
+    packet backend, which has no flush events at all)."""
+    prefill, decode = mini_pools()
+    # long flush + scale intervals: the ONLY timely wake-up is the
+    # dispatch event pushed when the replica actually frees
+    params = mini_params(backend="packet", handoff_interval_s=10.0,
+                         scale_interval_s=10.0)
+    trace = [Request(0, 0.001, 1024, 8), Request(1, 0.002, 1024, 8)]
+    res = ServingFleet(params, prefill, decode, trace).run()
+    first, second = res.records
+    assert second.prefill_start == pytest.approx(first.prefill_done)
+    assert second.prefill_done is not None
+    assert second.ttft < params.scale_interval_s / 2
+
+
 def test_migrate_rejects_foreign_ports():
     rail = RailOrchestrator(0, FleetParams(n_ports=16).fabric_spec()
                             .make_backend(16))
