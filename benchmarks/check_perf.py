@@ -144,6 +144,49 @@ def summary_markdown(records: Dict[str, dict]) -> str:
                     f"{100 * h['p99_ttft_overhead_vs_packet']:+.1f}% "
                     f"p99 TTFT")
             lines.append(f"\nwall: {rec['wall_s']}s")
+        elif "cells" in rec:
+            lines.append(f"{rec['n_cells']} fabric cells, "
+                         f"{rec['n_feasible']} feasible, "
+                         f"**{rec['n_frontier']} on the Pareto frontier** "
+                         f"({', '.join(rec['objectives'])}):")
+            lines.append("")
+            lines.append("| frontier cell | $/GPU | W/GPU | train ovh | "
+                         "queueing | p99 TTFT |")
+            lines.append("|---|---:|---:|---:|---:|---:|")
+            for c in rec["cells"]:
+                if not c.get("on_frontier"):
+                    continue
+                o = c["objectives"]
+                q = o["queueing_delay_s"]
+                p99 = o["p99_ttft_s"]
+                lines.append(
+                    f"| {c['cell']} "
+                    f"| {o['cost_per_gpu']:.2f} "
+                    f"| {o['power_per_gpu']:.3f} "
+                    f"| {100 * o['train_overhead']:.2f}% "
+                    f"| {'n/a' if q is None else f'{q:.3f}s'} "
+                    f"| {'n/a' if p99 is None else f'{1e3 * p99:.0f} ms'} "
+                    f"|")
+            infeasible = [c["cell"] for c in rec["cells"]
+                          if not c["feasible"]]
+            if infeasible:
+                lines.append(f"\ninfeasible cells (radix holes): "
+                             f"{', '.join(infeasible)}")
+            h = rec.get("headline", {})
+            sj, wk = h.get("single_job_100k"), h.get("week_trace_256")
+            if sj:
+                lines.append(f"\n- 100k-GPU single job: "
+                             f"**{sj['wall_s']}s wall**, "
+                             f"{100 * sj['overhead_vs_native']:.2f}% "
+                             f"overhead, {sj['n_ports_programmed']} "
+                             f"ports programmed")
+            if wk:
+                lines.append(f"- 256-job week trace: "
+                             f"**{wk['wall_s']}s wall**, "
+                             f"{wk['n_done']} done over "
+                             f"{wk['makespan_days']:.1f} simulated days, "
+                             f"{wk['n_reconfig_events']} reconfig events")
+            lines.append(f"\nwall: {rec['wall_s']}s")
         elif "points" in rec:
             lines.append("| point | GPUs | peak util | frag (peak) | "
                          "mean overhead | max queue delay | OCS queued |")

@@ -21,8 +21,14 @@ plane-call counters to ``BENCH_opus_sim.json``; ``--cluster`` sweeps
 derived from one FabricSpec; ``--serve`` runs the disaggregated
 prefill/decode serving fleet (DESIGN.md §11) on each backend against
 one deterministic diurnal+burst trace and writes
-``BENCH_opus_serve.json`` — req/s-per-watt and p99 TTFT, OCS vs packet.
-CI runs all four after the smoke subset and gates them against
+``BENCH_opus_serve.json`` — req/s-per-watt and p99 TTFT, OCS vs packet;
+``--planner`` evaluates the capacity-planner fabric grid (DESIGN.md
+§12: backend x radix x ports x policy Pareto frontier) plus the two
+vectorized-engine headline points (a 100k-GPU single job and a 256-job
+week-long cluster trace, each in seconds) and writes
+``BENCH_opus_planner.json``.  ``--profile`` wraps whichever mode ran in
+cProfile and prints the top-20 cumulative hotspots.
+CI runs all five after the smoke subset and gates them against
 benchmarks/baselines/ via benchmarks/check_perf.py (wall-clock ratio +
 exact counter match).
 """
@@ -321,6 +327,70 @@ def cluster_report(out_path: str = "BENCH_opus_cluster.json") -> dict:
     return rec
 
 
+def planner_report(out_path: str = "BENCH_opus_planner.json") -> dict:
+    """Capacity-planner grid (DESIGN.md §12): every FabricSpec cell
+    priced three ways (train overhead, cluster queueing, serving p99)
+    through the real control plane, reduced to a Pareto frontier, plus
+    the two scale points the vectorized engine makes affordable —
+    100,000 GPUs in one job, and 256 jobs across a simulated week —
+    each in seconds of wall clock."""
+    from repro.sim.planner import OBJECTIVES, plan
+
+    res = plan(headline=True)
+    rec = res.record()
+    print("== capacity planner: fabric grid + Pareto frontier ==")
+    print(f"  {rec['n_cells']} cells ({rec['n_feasible']} feasible, "
+          f"{rec['n_frontier']} on the frontier over "
+          f"{', '.join(OBJECTIVES)})")
+    import math as _math
+
+    def _fmt(v, f):
+        return "n/a" if v is None or _math.isnan(v) else f(v)
+
+    for row in res.frontier_rows():
+        o = row["objectives"]
+        print(f"  * {row['cell']:34s} ${o['cost_per_gpu']:7.2f}/GPU "
+              f"{o['power_per_gpu']:6.3f} W/GPU "
+              f"ovh {100 * o['train_overhead']:+5.2f}% "
+              f"q {_fmt(o['queueing_delay_s'], '{:.3f}s'.format):>7s} "
+              f"p99 {_fmt(o['p99_ttft_s'], lambda v: f'{1e3 * v:.0f}ms'):>6s}")
+    h = rec["headline"]
+    sj, wk = h["single_job_100k"], h["week_trace_256"]
+    print(f"  100k-GPU single job: wall={sj['wall_s']}s, "
+          f"overhead {100 * sj['overhead_vs_native']:.2f}%, "
+          f"{sj['n_ports_programmed']} ports programmed")
+    print(f"  256-job week trace:  wall={wk['wall_s']}s, "
+          f"{wk['n_done']} done over {wk['makespan_days']:.1f} simulated "
+          f"days, {wk['n_reconfig_events']} reconfig events")
+    Path(out_path).write_text(json.dumps(rec, indent=2) + "\n")
+    print(f"  wall={rec['wall_s']}s  -> {out_path}")
+    return rec
+
+
+def _profiled(fn):
+    """Run ``fn`` under cProfile; print the top-20 cumulative hotspots
+    (and append them to $GITHUB_STEP_SUMMARY when set)."""
+    import cProfile
+    import io
+    import os
+    import pstats
+
+    prof = cProfile.Profile()
+    out = prof.runcall(fn)
+    buf = io.StringIO()
+    stats = pstats.Stats(prof, stream=buf).sort_stats("cumulative")
+    stats.print_stats(20)
+    text = buf.getvalue()
+    print("\n== cProfile: top-20 by cumulative time ==")
+    print(text)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write("## cProfile: top-20 by cumulative time\n\n"
+                    "```\n" + text + "```\n")
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip-roofline", action="store_true")
@@ -340,27 +410,43 @@ def main():
                     help="write BENCH_opus_serve.json (serving-fleet "
                          "sweep: req/s-per-watt + p99 TTFT, OCS vs "
                          "packet from one FabricSpec) and exit")
+    ap.add_argument("--planner", action="store_true",
+                    help="write BENCH_opus_planner.json (capacity-"
+                         "planner fabric grid + Pareto frontier + the "
+                         "100k-GPU and week-trace headline points) "
+                         "and exit")
+    ap.add_argument("--profile", action="store_true",
+                    help="wrap the selected mode in cProfile and print "
+                         "the top-20 cumulative hotspots")
     args = ap.parse_args()
 
+    run = _profiled if args.profile else (lambda fn: fn())
     if args.perf:
-        perf_report()
+        run(perf_report)
         return 0
     if args.cluster:
-        cluster_report()
+        run(cluster_report)
         return 0
     if args.backend:
-        fabric_report()
+        run(fabric_report)
         return 0
     if args.serve:
-        serve_report()
+        run(serve_report)
+        return 0
+    if args.planner:
+        run(planner_report)
         return 0
 
-    headlines = {}
-    for fn in (paper.SMOKE if args.smoke else paper.ALL):
-        print()
-        headlines[fn.__name__] = fn()
-    if not args.skip_roofline and not args.smoke:
-        headlines["roofline"] = roofline_report()
+    def paper_suite():
+        out = {}
+        for fn in (paper.SMOKE if args.smoke else paper.ALL):
+            print()
+            out[fn.__name__] = fn()
+        if not args.skip_roofline and not args.smoke:
+            out["roofline"] = roofline_report()
+        return out
+
+    headlines = run(paper_suite)
 
     print("\n== headline summary ==")
     hs = headlines.get("bench_cost_power", {})

@@ -16,6 +16,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Iterable, List, Optional, Tuple
 
+import numpy as np
+
 from repro.configs.base import ModelConfig
 
 # digit assignment for symmetric dims (paper Fig 8: PP=0, then 1,2,...)
@@ -358,20 +360,22 @@ def count_windows(ops: Iterable[CommOp]) -> int:
 
 
 def phase_index_of(ops: Iterable[CommOp],
-                   table: Optional[List[Phase]] = None) -> List[int]:
-    """uid -> phase-index array for ``ops`` (-1 for non-scale-out uids).
+                   table: Optional[List[Phase]] = None) -> np.ndarray:
+    """uid -> phase-index vector for ``ops`` (-1 for non-scale-out uids).
 
-    Array-backed (op uids are dense from 0), built in one pass and shared
-    by every phase-aware driver — both simulator engines index it instead
-    of each rebuilding a per-uid dict.
+    Array-backed (op uids are dense from 0): an int64 numpy vector filled
+    with one slice-assignment per phase and shared by every phase-aware
+    driver — both simulator engines index it instead of each rebuilding a
+    per-uid dict, and the vectorized engine uses it directly as the class
+    key for its batched per-phase walks.
     """
     ops = list(ops)
     if table is None:
         table = build_phase_table(ops)
-    arr = [-1] * ((max(o.uid for o in ops) + 1) if ops else 0)
+    n = (max(o.uid for o in ops) + 1) if ops else 0
+    arr = np.full(n, -1, dtype=np.int64)
     for pi, p in enumerate(table):
-        for uid in range(p.start_idx, p.end_idx + 1):
-            arr[uid] = pi
+        arr[p.start_idx:p.end_idx + 1] = pi
     return arr
 
 

@@ -46,6 +46,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.controller import Controller, GroupState, WriteResult
 from repro.core.fabricspec import CrossSubSwitchError, FabricSpec, OCSArray
 from repro.core.orchestrator import RailOrchestrator
@@ -207,6 +209,10 @@ class ControlPlane:
         else:
             self.classes = [(r, 1) for r in range(self.n_ranks)]
         self.shims = [Shim(rep, mode=mode) for rep, _ in self.classes]
+        # class-cardinality vector: telemetry's weighted shim sums are one
+        # dot product over this instead of a Python loop (DESIGN.md §12)
+        self._class_weights = np.array([w for _, w in self.classes],
+                                       dtype=np.int64)
         # per-(group, class) write counters: class c's k-th write to group
         # g carries barrier index k — every shim replays the same SPMD op
         # stream, so the counters stay aligned with the controller's
@@ -245,14 +251,19 @@ class ControlPlane:
                 "the placement must fit one sub-switch")
 
     # -- profiling (§4.2) ----------------------------------------------------
-    def profile(self, ops: Sequence[CommOp]) -> None:
+    def profile(self, ops: Sequence[CommOp],
+                table: Optional[list] = None) -> None:
         """One traced iteration: fill every shim's phase table and register
         the communication groups in the controller's CTR table.
 
         The op stream is SPMD — every shim derives the SAME table — so it
-        is built once and shared (entries are immutable)."""
+        is built once and shared (entries are immutable).  Callers holding
+        a prebuilt shim table for these exact ops (``TimedWorkload.
+        shim_table()``; many cluster tenants share one workload instance)
+        pass it via ``table`` and skip the rebuild entirely."""
         from repro.core.shim import table_from_ops
-        table = table_from_ops(ops)
+        if table is None:
+            table = table_from_ops(ops)
         for s in self.shims:
             s.phase_table = table
             s.restart()
@@ -424,6 +435,74 @@ class ControlPlane:
         for o in self.orchestrators:
             o.deregister_job(self.job_id, now)
 
+    # -- steady-state bulk advance (vectorized engine, DESIGN.md §12) -------
+    @property
+    def replay_ready(self) -> bool:
+        """True at an iteration boundary where the promoted schedule cache
+        will replay the NEXT iteration verbatim — the precondition for the
+        vectorized engine's fast-forward (a full steady iteration's effect
+        is then exactly reproducible without walking it)."""
+        return (self._cache_enabled and self._sched is not None
+                and self._cursor == 0
+                and not self.controller.fallback_giant_ring)
+
+    def counter_snapshot(self) -> Dict[str, object]:
+        """Integer-counter state of every component this plane mutates, as
+        numpy vectors — two snapshots bracketing one steady iteration give
+        the per-iteration delta that ``bulk_advance`` replays k times in
+        one array op (the vectorized walk)."""
+        c = self.controller
+        job = np.array(
+            [[o.jobs[self.job_id].n_reconfig_events,
+              o.jobs[self.job_id].n_program_calls,
+              o.jobs[self.job_id].n_ports_programmed]
+             for o in self.orchestrators], dtype=np.int64)
+        n = len(self.shims)
+        return {
+            "shim": np.stack([
+                np.fromiter((s.n_topo_writes for s in self.shims),
+                            dtype=np.int64, count=n),
+                np.fromiter((s.n_waits for s in self.shims),
+                            dtype=np.int64, count=n)]),
+            "ctrl": np.array([c.n_barriers, c.n_dispatches], dtype=np.int64),
+            "job": job,
+        }
+
+    def bulk_advance(self, before: Dict[str, object],
+                     after: Dict[str, object], k: int) -> None:
+        """Apply k steady-state iterations' worth of counter deltas in one
+        vectorized step (``delta = after - before`` per component).
+
+        Integer telemetry of a steady (replayed) iteration is exactly
+        cyclic — every live-walked iteration produces the identical delta —
+        so ``counter += k * delta`` lands on precisely the numbers a
+        per-op walk of k more iterations would have produced.  Switch-level
+        totals advance in lockstep with this job's per-job counters so
+        shared-rail summaries stay consistent; switch BUSY clocks are left
+        untouched (frozen-contention model: a fast-forwarded job's future
+        reconfigurations do not occupy the switch against later tenants —
+        DESIGN.md §12 documents the trade)."""
+        assert k >= 0, k
+        if k == 0:
+            return
+        dshim = (after["shim"] - before["shim"]) * k
+        for i, s in enumerate(self.shims):
+            s.n_topo_writes += int(dshim[0, i])
+            s.n_waits += int(dshim[1, i])
+        dctrl = (after["ctrl"] - before["ctrl"]) * k
+        self.controller.n_barriers += int(dctrl[0])
+        self.controller.n_dispatches += int(dctrl[1])
+        djob = (after["job"] - before["job"]) * k
+        for i, o in enumerate(self.orchestrators):
+            st = o.jobs[self.job_id]
+            dre, dpc, dpp = (int(x) for x in djob[i])
+            st.n_reconfig_events += dre
+            st.n_program_calls += dpc
+            st.n_ports_programmed += dpp
+            o.n_reconfig_events += dre
+            o.ocs.n_program_calls += dpc
+            o.ocs.n_ports_programmed += dpp
+
     # -- observability -------------------------------------------------------
     @property
     def fallback_giant_ring(self) -> bool:
@@ -443,13 +522,16 @@ class ControlPlane:
         rails; the job's own slice of them on shared cluster rails)."""
         c = self.controller
         js = [o.job_stats(self.job_id) for o in self.orchestrators]
+        n = len(self.shims)
+        writes = np.fromiter((s.n_topo_writes for s in self.shims),
+                             dtype=np.int64, count=n)
+        waits = np.fromiter((s.n_waits for s in self.shims),
+                            dtype=np.int64, count=n)
         return {
             "n_barriers": c.n_barriers,
             "n_dispatches": c.n_dispatches,
-            "n_topo_writes": sum(w * s.n_topo_writes for s, (_, w)
-                                 in zip(self.shims, self.classes)),
-            "n_waits": sum(w * s.n_waits for s, (_, w)
-                           in zip(self.shims, self.classes)),
+            "n_topo_writes": int(self._class_weights @ writes),
+            "n_waits": int(self._class_weights @ waits),
             "n_reconfig_events": sum(s["n_reconfig_events"] for s in js),
             "n_program_calls": sum(s["n_program_calls"] for s in js),
             "n_ports_programmed": sum(s["n_ports_programmed"] for s in js),

@@ -37,12 +37,14 @@ import math
 from dataclasses import dataclass, field, replace
 from typing import Callable, Dict, List, Optional, Tuple
 
+import numpy as np
+
 from repro.core import phases as ph
 from repro.core.fabricspec import FabricSpec, OCSArray
 from repro.core.orchestrator import PortAllocator, RailOrchestrator
 from repro.core.plane import ControlPlane
 from repro.sim.opus_sim import (SHIM_MODE, EventEngine, SimParams, SimResult,
-                                simulate)
+                                VectorEngine, simulate)
 from repro.sim.workload import GPUS, build, build_serving
 
 
@@ -104,8 +106,16 @@ class ClusterJobSpec:
     # separate simulator
     workload: str = "train"       # train | serve_prefill | serve_decode
     batch_slots: int = 16         # resident slots (serve_decode only)
+    # minimum SIMULATED runtime: the tenant departs at the first
+    # iteration boundary at or past admitted + runtime_s (week-long
+    # traces).  The vectorized engine fast-forwards the steady cycles, so
+    # a week-long tenant costs the same wall time as a two-iteration one
+    # (DESIGN.md §12).  None (default) keeps the fixed iteration count —
+    # byte-identical to the pre-runtime cluster.
+    runtime_s: Optional[float] = None
 
     def __post_init__(self):
+        assert self.runtime_s is None or self.runtime_s > 0.0, self.runtime_s
         # every tenant drives the real control plane on the shared rails.
         # oneshot tenants run STATIC shims (circuits set once at
         # admission, never reconfigured — zero contention contributed);
@@ -149,6 +159,12 @@ class JobRecord:
 class ClusterSim:
     """N concurrent jobs through shared per-rail OCS port space."""
 
+    #: engine class each tenant runs on — the vectorized array-backed
+    #: core by default (bit-identical on fixed-iteration tenants; fast-
+    #: forwards ``runtime_s`` tenants).  Parity tests override this with
+    #: ``EventEngine`` to prove the cluster numbers are engine-invariant.
+    ENGINE_CLS = VectorEngine
+
     def __init__(self, params: ClusterParams):
         self.params = params
         self.allocator = PortAllocator(params.n_ports, params.policy)
@@ -177,17 +193,24 @@ class ClusterSim:
         self._ran = True
         pending = sorted(self.records, key=lambda r: r.spec.arrival)
         waiting: List[JobRecord] = []
-        # (record, engine, op generator, admission seq); seq keeps the
-        # min() tie-break stable when two engines share a clock value
+        # (record, engine, op generator, admission seq), appended in seq
+        # order and removed in place — so the parallel numpy clock array
+        # below stays position-aligned and ties resolve to the LOWEST
+        # index, which is the earliest admission seq: argmin over the
+        # array is exactly the old min(key=(t, seq)) scan, evaluated as
+        # one vectorized reduction instead of a Python loop per event
         active: List[Tuple[JobRecord, EventEngine, object, int]] = []
+        clocks = np.empty(0, dtype=np.float64)   # clocks[i] == active[i].t
         seq = 0
-
-        def next_active():
-            return min(active, key=lambda a: (a[1].t, a[3]))
 
         while pending or waiting or active:
             arrival = pending[0].spec.arrival if pending else math.inf
-            clock = next_active()[1].t if active else math.inf
+            if active:
+                idx = int(np.argmin(clocks))
+                clock = float(clocks[idx])
+            else:
+                idx = -1
+                clock = math.inf
             if pending and arrival <= clock:
                 rec = pending.pop(0)
                 # on an ocs_array rail a tenant's circuits must fit one
@@ -204,7 +227,9 @@ class ClusterSim:
                     waiting.append(rec)
                     self._sample(rec.spec.arrival, "queue", rec)
                 else:
-                    active.append(self._start(rec, seq))
+                    entry = self._start(rec, seq)
+                    active.append(entry)
+                    clocks = np.append(clocks, entry[1].t)
                     seq += 1
                 continue
             if not active:
@@ -222,19 +247,24 @@ class ClusterSim:
                 self._sample(max(now, rec.spec.arrival), "reject", rec)
                 while waiting and self._admit(
                         waiting[0], max(now, waiting[0].spec.arrival)):
-                    active.append(self._start(waiting.pop(0), seq))
+                    entry = self._start(waiting.pop(0), seq)
+                    active.append(entry)
+                    clocks = np.append(clocks, entry[1].t)
                     seq += 1
                 continue
-            entry = next_active()
-            rec, engine, gen, _ = entry
+            rec, engine, gen, _ = active[idx]
             try:
-                next(gen)                       # one op of the nearest job
+                next(gen)             # one event of the nearest job (one
+                clocks[idx] = engine.t   # op, or a fast-forward jump)
             except StopIteration:
-                active.remove(entry)
+                del active[idx]       # in-place removal preserves seq
+                clocks = np.delete(clocks, idx)   # order for the argmin
                 self._depart(rec, engine)
                 # departures free ports: re-try the FIFO queue head(s)
                 while waiting and self._admit(waiting[0], rec.finished):
-                    active.append(self._start(waiting.pop(0), seq))
+                    entry = self._start(waiting.pop(0), seq)
+                    active.append(entry)
+                    clocks = np.append(clocks, entry[1].t)
                     seq += 1
         return ClusterResult(self.params, self.records, self.events,
                              self.rails, self.allocator)
@@ -271,7 +301,12 @@ class ClusterSim:
             wl = build_serving(rec.spec.job, self.params.gpu,
                                rec.spec.workload.split("_", 1)[1],
                                batch_slots=rec.spec.batch_slots)
-        engine = EventEngine(
+        kw = {}
+        if rec.spec.runtime_s is not None:
+            # runtime-sized tenants need the vectorized engine's fast-
+            # forward; the fixed-iteration path works on any engine class
+            kw["min_runtime_s"] = rec.spec.runtime_s
+        engine = self.ENGINE_CLS(
             wl, SimParams(mode=rec.spec.mode,
                           ocs_latency=self.params.ocs_latency,
                           nic_linkup=self.params.nic_linkup,
@@ -279,7 +314,7 @@ class ClusterSim:
                           backend=self.params.backend,
                           radix=self.params.radix),
             plane=rec.plane, start=rec.admitted,
-            iterations=rec.spec.iterations)
+            iterations=rec.spec.iterations, **kw)
         return (rec, engine, engine.events(), seq)
 
     def _depart(self, rec: JobRecord, engine: EventEngine) -> None:
@@ -440,7 +475,8 @@ CATALOG: Tuple[Tuple[str, int, int], ...] = (
 def catalog_jobs(n_jobs: int, ranks_per_job: int, *, mean_gap: float = 5.0,
                  seed: int = 1, seq_len: int = 4096,
                  mode: str = "opus_prov",
-                 workload: str = "train") -> List[ClusterJobSpec]:
+                 workload: str = "train",
+                 runtime_s: Optional[float] = None) -> List[ClusterJobSpec]:
     """The i-th cluster tenant, deterministically: cycle the CATALOG
     templates over a :func:`exp_trace` arrival trace (first arrival
     pinned to t=0 so the cluster never idles at the front).
@@ -461,7 +497,8 @@ def catalog_jobs(n_jobs: int, ranks_per_job: int, *, mean_gap: float = 5.0,
                            pp=pp, global_batch=16 * fsdp, seq_len=seq_len,
                            n_microbatch=pp)
         specs.append(ClusterJobSpec(f"job{i}", job, arrival=arrivals[i],
-                                    mode=mode, workload=workload))
+                                    mode=mode, workload=workload,
+                                    runtime_s=runtime_s))
     return specs
 
 

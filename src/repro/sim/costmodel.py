@@ -148,9 +148,13 @@ def compare(n_gpus: int, domain: int, eps: Union[str, FabricSpec],
             ports_per_link=OCS_PORTS_PER_LINK.get(eps_spec.part_name, 1))
     eps_bill = rail_fabric(n_gpus, domain, eps_spec)
     ocs_bill = rail_fabric(n_gpus, domain, ocs)
+    # a zero-cost/zero-power photonic side (a passive patch panel) makes
+    # the savings ratio unbounded, not undefined
     return {
         "eps_cost": eps_bill.cost, "ocs_cost": ocs_bill.cost,
         "eps_power": eps_bill.power, "ocs_power": ocs_bill.power,
-        "cost_ratio": eps_bill.cost / ocs_bill.cost,
-        "power_ratio": eps_bill.power / ocs_bill.power,
+        "cost_ratio": (eps_bill.cost / ocs_bill.cost
+                       if ocs_bill.cost else math.inf),
+        "power_ratio": (eps_bill.power / ocs_bill.power
+                        if ocs_bill.power else math.inf),
     }

@@ -25,19 +25,23 @@ SwitchBackend (DESIGN.md §10; override via SimParams.backend/fabric):
             control residue.
 
 Engines
-  event     DEFAULT.  Replays the timed workload through the REAL control
-            plane (``repro.core.plane.ControlPlane``): Shims emit Action
-            records, topo_writes run against the real Controller /
-            RailOrchestrator / SwitchBackend, and every reconfiguration
-            count or exposure second is derived from their telemetry.
-            For the reconfigurable modes two iterations are replayed —
-            the first warms the topology into its cyclic steady state
-            (the §4.2 profiling iterations), the second is measured;
-            static-fabric modes (native/oneshot) have no topology state
-            to warm and run one.  The plane runs in rank-equivalence-
-            class mode (DESIGN.md §8): one representative Shim per
-            pipeline way, weighted barriers, one batched plane call per
-            op — which is what makes the 2048-GPU paper sweeps tractable.
+  event     DEFAULT: the vectorized array-backed engine (DESIGN.md §12).
+            Live iterations replay the timed workload through the REAL
+            control plane exactly like the collapsed engine below — the
+            same floating-point expressions, read from precomputed per-op
+            duration/phase tables — and once the plane's replay cache
+            holds a complete steady cycle, every REMAINING iteration is
+            applied as one vectorized walk: clock += k * step,
+            counters += k * per-iteration-delta (numpy snapshot math in
+            ``ControlPlane.bulk_advance``).  Runs that measure the paper's
+            two-iteration convention never fast-forward, so every
+            committed BENCH counter is byte-identical to the collapsed
+            engine; longer runs (``iterations > 2``, ``min_runtime_s``)
+            are where the array path pays off.
+  event_collapsed  The collapsed per-op engine (PR 2): one representative
+            Shim per pipeline way, weighted barriers, one batched plane
+            call per op, every op walked live.  Kept as the vectorized
+            engine's ground truth (three-way parity tests).
   event_full  The same event engine on an UNCOLLAPSED plane (one Shim and
             one weighted-1 barrier write per rank).  O(ops x ranks)
             Python dispatch; kept as the ground truth the collapsed plane
@@ -53,8 +57,8 @@ digits change (paper Fig 11 right).
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
-from functools import lru_cache
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core import phases as ph
@@ -175,12 +179,13 @@ def simulate(wl: TimedWorkload, params: SimParams, *,
     """Simulate one steady-state iteration.
 
     ``engine`` selects the implementation: ``"event"`` (default, EVERY
-    mode) drives the real control plane collapsed to rank-equivalence
-    classes on the mode's SwitchBackend, ``"event_full"`` the same plane
-    uncollapsed (per-rank, O(ranks) dispatch — the parity ground truth),
-    ``"analytic"`` the closed-form cross-check.  ``ocs_fail`` is the
-    event engines' fault injector (``attempt -> bool``; persistent True
-    triggers the §4.2 giant-ring fallback).
+    mode) is the vectorized array-backed engine on the collapsed control
+    plane (DESIGN.md §12), ``"event_collapsed"`` the per-op collapsed
+    engine it is tested bit-identical against, ``"event_full"`` the same
+    plane uncollapsed (per-rank, O(ranks) dispatch — the parity ground
+    truth), ``"analytic"`` the closed-form cross-check.  ``ocs_fail`` is
+    the event engines' fault injector (``attempt -> bool``; persistent
+    True triggers the §4.2 giant-ring fallback).
     """
     if params.static_fabric:
         assert ocs_fail is None, \
@@ -189,9 +194,12 @@ def simulate(wl: TimedWorkload, params: SimParams, *,
     if eng == "analytic":
         assert ocs_fail is None, "fault injection needs the event engine"
         return _simulate_analytic(wl, params)
-    if eng not in ("event", "event_full"):
+    if eng == "event":
+        return VectorEngine(wl, params, ocs_fail=ocs_fail).run()
+    if eng not in ("event_collapsed", "event_full"):
         raise ValueError(f"unknown engine {eng!r}")
-    return _simulate_event(wl, params, ocs_fail, collapse=(eng == "event"))
+    return _simulate_event(wl, params, ocs_fail,
+                           collapse=(eng == "event_collapsed"))
 
 
 # ---------------------------------------------------------------------------
@@ -215,14 +223,53 @@ def build_plane(job: ph.JobConfig, params: SimParams,
                         collapse=collapse)
 
 
-@lru_cache(maxsize=64)
-def _phase_info(ops: Tuple[ph.CommOp, ...]):
-    """(phase table, uid -> phase-index array) for an op stream — the ONE
-    place both engines derive phase structure; cached so latency/bandwidth
-    sweeps over the same workload build it once (CommOp is frozen, so the
-    tuple is hashable and the entries immutable)."""
-    table = ph.build_phase_table(list(ops))
-    return table, ph.phase_index_of(ops, table)
+def _phase_info(wl: TimedWorkload):
+    """(phase table, uid -> phase-index vector) for a workload — now keyed
+    by CONFIG IDENTITY instead of re-hashing the op tuple: ``workload.
+    build``/``build_serving`` are lru-cached per (job, gpu), so every
+    tenant of a shared shape holds the same TimedWorkload instance and
+    this delegates to its per-instance cache (one phase table per config
+    across a whole ClusterSim, zero tuple hashing)."""
+    return wl.phase_info()
+
+
+def _op_meta(wl: TimedWorkload, params: SimParams) -> List[tuple]:
+    """Precomputed per-op table for the vectorized engine: one entry per
+    workload op, ``(kind, op, compute_before, dur_healthy, dur_fallback,
+    phase_index)`` with kind 0=mgmt, 1=scale_up, 2=scale_out.
+
+    Durations are evaluated with EXACTLY the expressions the per-op
+    collapsed engine uses (same operand order, same literals), so reading
+    them back preserves bit-identical floats.  Cached per (workload
+    instance, mode): the tables depend only on the job/gpu shape and the
+    mode's bandwidth split, so a 256-job cluster sharing one config
+    builds them once."""
+    cache = wl.__dict__.setdefault("_op_meta", {})
+    meta = cache.get(params.mode)
+    if meta is not None:
+        return meta
+    job, gpu = wl.job, wl.gpu
+    shares = _static_split(job) if params.mode == "oneshot" else {}
+    dilation = _giant_ring_dilation(job)
+    _, phase_of = wl.phase_info()
+    meta = []
+    for op in wl.ops:
+        if op.scale == "mgmt":
+            dur = MGMT_LAT + op.bytes_per_gpu * 8 / (MGMT_GBPS * 1e9)
+            meta.append((0, op, op.compute_before, dur, dur, -1))
+        elif op.scale == "scale_up":
+            meta.append((1, op, op.compute_before, 0.0, 0.0, -1))
+        else:
+            bw = gpu.scale_out_gbps
+            if shares:
+                bw = gpu.scale_out_gbps * max(shares.get(op.dim, 1.0), 1e-3)
+            dur_h = wl.comm_time(op, bandwidth_gbps=bw)
+            dur_f = wl.comm_time(
+                op, bandwidth_gbps=bw * dilation.get(op.dim, 1.0))
+            meta.append((2, op, op.compute_before, dur_h, dur_f,
+                         int(phase_of[op.uid])))
+    cache[params.mode] = meta
+    return meta
 
 
 def _mgmt_op(op, t: float, t0: float, timeline: List[TimedOp]) -> float:
@@ -269,7 +316,7 @@ class EventEngine:
         self.params = params
         self.plane = plane if plane is not None else build_plane(
             wl.job, params, ocs_fail, collapse=collapse)
-        self.plane.profile(wl.ops)
+        self.plane.profile(wl.ops, table=wl.shim_table())
         self.iterations = iterations
         self.t = start
         self.result: Optional[SimResult] = None
@@ -283,7 +330,7 @@ class EventEngine:
         wl, params, plane = self.wl, self.params, self.plane
         job, gpu = wl.job, wl.gpu
         ctrl_sync, ctrl_async = params.resolved(job.n_gpus)
-        _, phase_of = _phase_info(tuple(wl.ops))
+        _, phase_of = _phase_info(wl)
         dilation = _giant_ring_dilation(job)  # fault fallback bw factors
         # oneshot: the patched-once fabric splits NIC bandwidth statically
         # across the scale-out dims (same sqrt-allocation, and the same
@@ -407,6 +454,179 @@ def _simulate_event(wl: TimedWorkload, params: SimParams,
                        collapse=collapse).run()
 
 
+class VectorEngine(EventEngine):
+    """Array-backed engine (DESIGN.md §12): the default behind
+    ``engine="event"``.
+
+    Live iterations read precomputed per-op (duration, phase) tables
+    (:func:`_op_meta`) instead of re-deriving bandwidth splits per op, but
+    advance the clock with the SAME floating-point expressions in the same
+    order as :class:`EventEngine` — a two-iteration run is bit-identical
+    to the collapsed engine in every float and every counter (the BENCH
+    byte-identity contract, tests/test_vector_engine.py).
+
+    Once one full steady iteration has replayed from the plane's schedule
+    cache, its effect is captured as (clock delta, numpy counter-delta
+    snapshot) and every remaining iteration is applied as ONE vectorized
+    walk: ``t += k * step`` and ``ControlPlane.bulk_advance(k)`` — no
+    per-op ``next()``, no plane calls.  Integer telemetry of a steady
+    iteration is exactly cyclic, so the fast-forwarded counters equal a
+    live walk's; the measured-iteration floats are the captured
+    iteration's (iteration-relative, hence reusable verbatim).
+
+    ``min_runtime_s`` sizes the run by SIMULATED time instead of a fixed
+    iteration count: the engine walks warmup + one captured iteration
+    live, then fast-forwards however many cycles reach the target — a
+    week-long tenant costs the same wall time as a two-iteration one.
+    Fault injection (``ocs_fail``/giant-ring fallback) disables
+    fast-forwarding: faulted runs walk every op live, identical to the
+    collapsed engine.
+    """
+
+    def __init__(self, wl: TimedWorkload, params: SimParams, *,
+                 ocs_fail: Optional[Callable[[int], bool]] = None,
+                 collapse: bool = True,
+                 plane: Optional[ControlPlane] = None,
+                 start: float = 0.0, iterations: Optional[int] = None,
+                 min_runtime_s: Optional[float] = None):
+        if min_runtime_s is not None and iterations is None:
+            # runtime-sized runs need warmup + one captured steady
+            # iteration even on static fabrics (whose default is 1)
+            iterations = 2
+        super().__init__(wl, params, ocs_fail=ocs_fail, collapse=collapse,
+                         plane=plane, start=start, iterations=iterations)
+        assert min_runtime_s is None or min_runtime_s > 0.0, min_runtime_s
+        self.min_runtime_s = min_runtime_s
+        self.fastforwarded_iterations = 0
+
+    def events(self):
+        assert not self._started, "events() is single-shot per engine"
+        self._started = True
+        wl, params, plane = self.wl, self.params, self.plane
+        ctrl_sync, ctrl_async = params.resolved(wl.job.n_gpus)
+        meta = _op_meta(wl, params)
+        # fast-forward precondition: a fault injector can fire on any
+        # future dispatch, so a faultable plane is never fast-forwarded
+        ff_ok = plane.ocs_fail is None
+        target = None if self.min_runtime_s is None \
+            else self.t + self.min_runtime_s
+
+        t = self.t
+        pending_ready: Optional[float] = None
+        step_time = 0.0
+        timeline: List[TimedOp] = []
+        n_reconfigs = n_writes = 0
+        exposed_r = exposed_c = 0.0
+        tel0: Dict[str, object] = {}
+        captured = False
+        measured: Optional[Dict[str, int]] = None
+        snap0 = snap1 = None
+        iteration = 0
+        while True:
+            remaining = self.iterations - iteration
+            if remaining <= 0 and (target is None or t >= target):
+                break
+            if captured and ff_ok and plane.replay_ready:
+                # the vectorized walk: every remaining iteration replays
+                # the captured steady cycle in one array-op advance
+                k = max(remaining, 0)
+                if target is not None and t < target:
+                    k = max(k, math.ceil((target - t) / step_time))
+                if k > 0:
+                    plane.bulk_advance(snap0, snap1, k)
+                    t = t + k * step_time
+                    iteration += k
+                    self.fastforwarded_iterations += k
+                    self.t = t
+                    yield t
+                continue
+            # ---- live iteration (bit-identical to EventEngine) ----
+            plane.start_iteration()
+            if not captured:
+                tel0 = plane.telemetry()
+            will_capture = ff_ok and not captured and plane.replay_ready
+            if will_capture:
+                snap0 = plane.counter_snapshot()
+            t0 = t
+            timeline = []
+            n_reconfigs = n_writes = 0
+            exposed_r = exposed_c = 0.0
+            prev_phase = -1
+            for kind, op, compute, dur_h, dur_f, pi in meta:
+                t += compute
+                if kind == 0:                       # mgmt
+                    timeline.append(TimedOp(op, t - t0, t + dur_h - t0))
+                    t += dur_h
+                    self.t = t
+                    yield t
+                    continue
+                if kind == 1:                       # scale_up: off-rail
+                    self.t = t
+                    yield t
+                    continue
+                new_phase = pi != prev_phase
+                if new_phase and pending_ready is not None:
+                    exp = max(0.0, pending_ready - t)
+                    exposed_c += min(exp, ctrl_async)
+                    exposed_r += max(0.0, exp - ctrl_async)
+                    t = max(t, pending_ready)
+                    pending_ready = None
+                ev = plane.pre_comm_all(op, now=t)
+                write = ev.write if (ev.write is not None
+                                     and ev.write.complete) else None
+                if write is not None:
+                    n_writes += 1
+                    if write.reconfigured:
+                        n_reconfigs += 1
+                        exposed_c += ctrl_sync
+                        exposed_r += write.ack_time - t
+                        t = write.ack_time + ctrl_sync
+                    else:
+                        exposed_c += PP_OP_CTRL
+                        t += PP_OP_CTRL
+                start = t
+                t = start + (dur_f if plane.fallback_giant_ring else dur_h)
+                timeline.append(TimedOp(op, start - t0, t - t0))
+                prev_phase = pi
+                ev = plane.post_comm_all(op, now=t + ctrl_async)
+                write = ev.write if (ev.write is not None
+                                     and ev.write.complete) else None
+                if write is not None:
+                    n_writes += 1
+                    if write.reconfigured:
+                        n_reconfigs += 1
+                        pending_ready = write.ack_time
+                    else:
+                        exposed_c += PP_OP_CTRL
+                        t += PP_OP_CTRL
+                self.t = t
+                yield t
+            step_time = t - t0
+            iteration += 1
+            if will_capture:
+                snap1 = plane.counter_snapshot()
+                telc = plane.telemetry()
+                measured = {k: telc[k] - tel0[k] for k in telc
+                            if isinstance(telc[k], int)
+                            and not isinstance(telc[k], bool)}
+                captured = True
+            if target is not None and step_time <= 0.0:
+                raise ValueError(
+                    "min_runtime_s on a zero-duration iteration "
+                    f"(step_time={step_time!r}) would never terminate")
+        tel = plane.telemetry()
+        if measured is None:       # no captured steady cycle (fault path)
+            measured = {k: tel[k] - tel0[k] for k in tel
+                        if isinstance(tel[k], int)
+                        and not isinstance(tel[k], bool)}
+        tel["measured"] = measured
+        tel["calls"] = plane.call_stats()
+        self.result = SimResult(
+            step_time, n_reconfigs, n_writes, exposed_r, exposed_c,
+            timeline, engine="event" if plane.collapse else "event_full",
+            telemetry=tel)
+
+
 # ---------------------------------------------------------------------------
 # analytic engine: closed-form cross-check (pre-ControlPlane formulation)
 # ---------------------------------------------------------------------------
@@ -415,7 +635,7 @@ def _simulate_event(wl: TimedWorkload, params: SimParams,
 def _simulate_analytic(wl: TimedWorkload, params: SimParams) -> SimResult:
     job, gpu = wl.job, wl.gpu
     n_ways = job.pp
-    table, phase_of = _phase_info(tuple(wl.ops))
+    table, phase_of = _phase_info(wl)
 
     shares = _static_split(job) if params.mode == "oneshot" else {}
     reconf_total = params.ocs_latency + params.nic_linkup

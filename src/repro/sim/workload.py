@@ -8,10 +8,12 @@ follow the paper's evaluation platforms (§5).
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import lru_cache
 from typing import Dict, List, Optional
 
 from repro.configs.base import ModelConfig
-from repro.core.phases import CommOp, JobConfig, iteration_schedule
+from repro.core.phases import (CommOp, JobConfig, build_phase_table,
+                               iteration_schedule, phase_index_of)
 
 
 @dataclass(frozen=True)
@@ -76,7 +78,38 @@ class TimedWorkload:
         """
         return base_latency + op.bytes_per_gpu * 8.0 / (bandwidth_gbps * 1e9)
 
+    # -- per-instance derived tables (built once, shared by every engine) --
+    #
+    # ``build``/``build_serving`` are lru-cached by config identity, so
+    # every tenant of a shared (job, gpu) shape receives the SAME
+    # TimedWorkload instance; caching the phase table on the instance
+    # dedupes phase-table construction across an entire ClusterSim.  The
+    # dataclass is frozen but not slotted, so lazily stashing in __dict__
+    # (cached_property style) is safe and costs one dict probe thereafter.
 
+    def phase_info(self):
+        """(phase table, uid -> phase-index numpy vector) of ``ops``."""
+        try:
+            return self.__dict__["_phase_info"]
+        except KeyError:
+            table = build_phase_table(self.ops)
+            info = (table, phase_index_of(self.ops, table))
+            self.__dict__["_phase_info"] = info
+            return info
+
+    def shim_table(self):
+        """Shim-format phase table (core.shim.table_from_ops), shared so a
+        ControlPlane profiling this workload skips the rebuild."""
+        try:
+            return self.__dict__["_shim_table"]
+        except KeyError:
+            from repro.core.shim import table_from_ops
+            table = table_from_ops(self.ops)
+            self.__dict__["_shim_table"] = table
+            return table
+
+
+@lru_cache(maxsize=256)
 def build(job: JobConfig, gpu_name: str) -> TimedWorkload:
     gpu = GPUS[gpu_name]
     mb_tokens = job.global_batch // job.fsdp // job.microbatches * job.seq_len
