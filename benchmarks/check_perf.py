@@ -144,6 +144,28 @@ def summary_markdown(records: Dict[str, dict]) -> str:
                     f"{100 * h['p99_ttft_overhead_vs_packet']:+.1f}% "
                     f"p99 TTFT")
             lines.append(f"\nwall: {rec['wall_s']}s")
+        elif "sched_ab" in rec:
+            lines.append("| config | GPUs | OCS lat | phase_boundary | "
+                         "per_collective | step Δ | exposure Δ |")
+            lines.append("|---|---:|---:|---:|---:|---:|---:|")
+            for c in rec["sched_ab"]:
+                lines.append(
+                    f"| {c['config']} | {c['n_gpus']} "
+                    f"| {1e3 * c['ocs_latency']:.0f} ms "
+                    f"| {c['phase_boundary']['modeled_step_s']:.3f}s "
+                    f"| {c['per_collective']['modeled_step_s']:.3f}s "
+                    f"| {100 * c['step_reduction']:+.1f}% "
+                    f"| {100 * c['exposure_reduction']:+.1f}% |")
+            h = rec.get("headline", {})
+            if h:
+                lines.append(
+                    f"\nper_collective wins "
+                    f"**{h['n_per_collective_wins']}/{h['n_cells']}** "
+                    f"cells; best "
+                    f"**{100 * h['best_exposure_reduction']:.1f}%** "
+                    f"comm-exposure cut on {h['best_config']} @ "
+                    f"{1e3 * h['best_ocs_latency']:.0f} ms")
+            lines.append(f"\nwall: {rec['wall_s']}s")
         elif "cells" in rec:
             lines.append(f"{rec['n_cells']} fabric cells, "
                          f"{rec['n_feasible']} feasible, "

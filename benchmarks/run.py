@@ -26,9 +26,12 @@ one deterministic diurnal+burst trace and writes
 §12: backend x radix x ports x policy Pareto frontier) plus the two
 vectorized-engine headline points (a 100k-GPU single job and a 256-job
 week-long cluster trace, each in seconds) and writes
-``BENCH_opus_planner.json``.  ``--profile`` wraps whichever mode ran in
-cProfile and prints the top-20 cumulative hotspots.
-CI runs all five after the smoke subset and gates them against
+``BENCH_opus_planner.json``; ``--scheduler-ab`` runs the DESIGN.md §13
+A/B — phase_boundary vs per_collective circuit scheduling on EP-heavy
+MoE configs across OCS latencies — and writes ``BENCH_opus_sched.json``.
+``--profile`` wraps whichever mode ran in cProfile and prints the
+top-20 cumulative hotspots.
+CI runs all six after the smoke subset and gates them against
 benchmarks/baselines/ via benchmarks/check_perf.py (wall-clock ratio +
 exact counter match).
 """
@@ -73,11 +76,14 @@ def roofline_report(dry_dir: str = "results/dryrun"):
     return {"ok": len(rows), "skipped": skipped, "errors": errors}
 
 
-def perf_report(out_path: str = "BENCH_opus_sim.json") -> dict:
+def perf_report(out_path: str = "BENCH_opus_sim.json",
+                scheduler: str = "phase_boundary") -> dict:
     """Wall-clock + plane-call counters of one 2048-GPU event-engine run
     (2 iterations: warmup + measured), written as the cross-PR perf
     record.  The paper's headline scale point (Figs 12-13, ≤6% overhead
-    at 2,048 GPUs) through the REAL control plane."""
+    at 2,048 GPUs) through the REAL control plane.  ``scheduler`` selects
+    the circuit-scheduling granularity (DESIGN.md §13); the committed
+    baseline is phase_boundary."""
     from repro.configs.base import get_config
     from repro.core import phases as ph
     from repro.sim.opus_sim import SimParams, simulate
@@ -88,7 +94,8 @@ def perf_report(out_path: str = "BENCH_opus_sim.json") -> dict:
     wl = build(job, "h200")
     nat = simulate(wl, SimParams(mode="native")).step_time
     t0 = time.perf_counter()
-    r = simulate(wl, SimParams(mode="opus_prov", ocs_latency=0.01))
+    r = simulate(wl, SimParams(mode="opus_prov", ocs_latency=0.01,
+                               scheduler=scheduler))
     wall = time.perf_counter() - t0
     calls = dict(r.telemetry["calls"])
     if calls["replayed_iterations"] < 1:
@@ -280,6 +287,88 @@ def serve_report(out_path: str = "BENCH_opus_serve.json") -> dict:
     return rec
 
 
+# EP-heavy MoE points for the scheduler A/B (DESIGN.md §13).  The
+# 512-GPU deepseek point straddles the crossover — per-collective wins
+# at 1 ms OCS latency and loses at 10 ms, because its ~0.7 GB/GPU
+# all-to-alls are worth one reconfig round-trip only when the switch is
+# fast; the 64-GPU granite point (~1.9 GB/GPU routed) wins at both.
+SCHED_AB_GRID = (
+    ("deepseek_moe_16b", dict(tp=8, fsdp=8, ep=8, pp=1,
+                              global_batch=256, seq_len=8192)),
+    ("granite_moe_1b_a400m", dict(tp=2, fsdp=4, ep=8, pp=1,
+                                  global_batch=128, seq_len=8192)),
+)
+SCHED_AB_LATENCIES = (0.001, 0.01)
+
+
+def sched_report(out_path: str = "BENCH_opus_sched.json") -> dict:
+    """Scheduler A/B (DESIGN.md §13): phase_boundary vs per_collective
+    on EP-heavy MoE configs across OCS reconfiguration latencies, every
+    cell through the REAL control plane in opus_prov mode.  The record
+    the tentpole exists for: where per-collective rescheduling beats
+    ring forwarding of the expert all-to-all, and where the per-round
+    reconfig cost eats the gain."""
+    from repro.configs.base import get_config
+    from repro.core import phases as ph
+    from repro.sim.opus_sim import SimParams, simulate
+    from repro.sim.workload import build
+
+    print("== scheduler A/B: phase_boundary vs per_collective ==")
+    rows = []
+    t_all = time.perf_counter()
+    for name, shape in SCHED_AB_GRID:
+        job = ph.JobConfig(model=get_config(name), **shape)
+        wl = build(job, "h200")
+        nat = simulate(wl, SimParams(mode="native")).step_time
+        for lat in SCHED_AB_LATENCIES:
+            cell = {"config": name, "n_gpus": job.n_gpus,
+                    "ocs_latency": lat, "native_step_s": round(nat, 6)}
+            for sched in ("phase_boundary", "per_collective"):
+                r = simulate(wl, SimParams(mode="opus_prov",
+                                           ocs_latency=lat,
+                                           scheduler=sched))
+                m = r.telemetry["measured"]
+                cell[sched] = {
+                    "modeled_step_s": round(r.step_time, 6),
+                    "overhead_vs_native": round(r.step_time / nat - 1, 6),
+                    "n_reconfigs": r.n_reconfigs,
+                    "n_barriers": m["n_barriers"],
+                    "n_dispatches": m["n_dispatches"],
+                    "n_ports_programmed": m["n_ports_programmed"],
+                }
+            pb = cell["phase_boundary"]["modeled_step_s"]
+            pc = cell["per_collective"]["modeled_step_s"]
+            # comm exposure = everything the fabric adds over the native
+            # (packet) step; the reduction is the headline win metric
+            cell["step_reduction"] = round(1 - pc / pb, 6)
+            cell["exposure_reduction"] = round(
+                1 - (pc - nat) / (pb - nat), 6)
+            rows.append(cell)
+            print(f"  {name:22s} {job.n_gpus:4d} GPUs @ {lat * 1e3:4.0f} ms: "
+                  f"pb {pb:7.3f}s  pc {pc:7.3f}s  "
+                  f"step {100 * cell['step_reduction']:+6.1f}%  "
+                  f"exposure {100 * cell['exposure_reduction']:+6.1f}%")
+    best = max(rows, key=lambda c: c["exposure_reduction"])
+    headline = {
+        "n_cells": len(rows),
+        "n_per_collective_wins": sum(c["step_reduction"] > 0 for c in rows),
+        "best_config": best["config"],
+        "best_ocs_latency": best["ocs_latency"],
+        "best_exposure_reduction": best["exposure_reduction"],
+    }
+    wall = time.perf_counter() - t_all
+    rec = {"bench": "opus_scheduler_ab", "wall_s": round(wall, 4),
+           "sched_ab": rows, "headline": headline}
+    Path(out_path).write_text(json.dumps(rec, indent=2) + "\n")
+    print(f"  per_collective wins {headline['n_per_collective_wins']}/"
+          f"{headline['n_cells']} cells; best "
+          f"{100 * headline['best_exposure_reduction']:.1f}% exposure cut "
+          f"on {headline['best_config']} @ "
+          f"{headline['best_ocs_latency'] * 1e3:.0f} ms")
+    print(f"  wall={wall:.3f}s  -> {out_path}")
+    return rec
+
+
 # (n_jobs, ranks_per_job, shared ports per rail, allocation policy):
 # capacity-rich 4-job point, then increasingly multiplexed mixes where
 # arrivals queue on port space and reconfigs contend on the shared OCS
@@ -415,6 +504,14 @@ def main():
                          "planner fabric grid + Pareto frontier + the "
                          "100k-GPU and week-trace headline points) "
                          "and exit")
+    ap.add_argument("--scheduler-ab", action="store_true",
+                    help="write BENCH_opus_sched.json (phase_boundary vs "
+                         "per_collective on EP-heavy MoE configs across "
+                         "OCS latencies, DESIGN.md §13) and exit")
+    ap.add_argument("--scheduler", default="phase_boundary",
+                    choices=["phase_boundary", "per_collective"],
+                    help="circuit-scheduling granularity for --perf "
+                         "(baseline record uses phase_boundary)")
     ap.add_argument("--profile", action="store_true",
                     help="wrap the selected mode in cProfile and print "
                          "the top-20 cumulative hotspots")
@@ -422,7 +519,10 @@ def main():
 
     run = _profiled if args.profile else (lambda fn: fn())
     if args.perf:
-        run(perf_report)
+        run(lambda: perf_report(scheduler=args.scheduler))
+        return 0
+    if args.scheduler_ab:
+        run(sched_report)
         return 0
     if args.cluster:
         run(cluster_report)

@@ -6,8 +6,9 @@
 3. Simulate one iteration under EPS vs Opus vs Opus+Provisioning.
 4. Print the cost/power advantage of replacing rail switches with OCSes.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--scheduler per_collective]
 """
+import argparse
 import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
@@ -24,6 +25,13 @@ from repro.sim.workload import build
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scheduler", default="phase_boundary",
+                    choices=["phase_boundary", "per_collective"],
+                    help="circuit-scheduling granularity for the opus "
+                         "modes (DESIGN.md §13)")
+    args = ap.parse_args()
+
     print("=== 1. train a reduced yi-9b on photonic rails (4 rails x TP2) ===")
     loss = train_main([
         "--arch", "yi_9b", "--smoke", "--steps", "10", "--mesh", "4x2",
@@ -46,7 +54,11 @@ def main():
     wl = build(job, "a100")
     last = None
     for mode in ("native", "oneshot", "opus", "opus_prov"):
-        r = simulate(wl, SimParams(mode=mode, ocs_latency=0.05))
+        # the scheduler axis applies to the reconfiguring modes only —
+        # static fabrics have no circuit rounds to schedule
+        sched = args.scheduler if mode in ("opus", "opus_prov") else None
+        r = simulate(wl, SimParams(mode=mode, ocs_latency=0.05,
+                                   scheduler=sched))
         print(f"  {mode:10s} step={r.step_time:7.3f}s "
               f"reconfigs={r.n_reconfigs}  engine={r.engine}")
         last = r

@@ -17,7 +17,7 @@ import sys
 from dataclasses import replace
 
 from repro.configs.base import get_config
-from repro.core.fabricspec import CrossSubSwitchError
+from repro.core.fabric import CrossSubSwitchError
 from repro.core.phases import JobConfig, count_reconfigs
 from repro.sim.cluster import ClusterParams, catalog_jobs, simulate_cluster
 from repro.sim.costmodel import OCS_PORTS_PER_LINK, compare
@@ -41,7 +41,7 @@ def run_cluster(args):
     res = simulate_cluster(specs, ClusterParams(
         n_ports=n_ports, n_rails=args.rails, policy=args.policy,
         ocs_latency=0.01, gpu=args.gpu, backend=args.backend,
-        radix=args.radix))
+        radix=args.radix, scheduler=args.scheduler))
     s = res.summary()
     print(f"{args.jobs} jobs x {args.ranks_per_job} ranks on {n_ports} "
           f"shared ports/rail ({args.policy}, {args.backend}"
@@ -107,9 +107,16 @@ def main():
     ap.add_argument("--radix", type=int, default=None,
                     help="ocs_array sub-switch radix (ports per element; "
                          "a job's circuits must fit one sub-switch)")
+    ap.add_argument("--scheduler", default="phase_boundary",
+                    choices=["phase_boundary", "per_collective"],
+                    help="circuit-scheduling granularity (DESIGN.md §13): "
+                         "reconfigure at phase boundaries (paper) or per "
+                         "collective round (PCCL)")
     args = ap.parse_args()
     if args.fault and args.engine == "analytic":
         ap.error("--fault needs the event engine (real control plane)")
+    if args.scheduler != "phase_boundary" and args.engine == "analytic":
+        ap.error("--scheduler per_collective needs an event engine")
     if args.backend == "ocs_array" and args.radix is None:
         ap.error("--backend ocs_array needs --radix")
     if args.jobs:
@@ -133,7 +140,8 @@ def main():
             p = simulate(wl, SimParams(mode="opus_prov", ocs_latency=lat,
                                        n_rails=args.rails,
                                        backend=args.backend,
-                                       radix=args.radix),
+                                       radix=args.radix,
+                                       scheduler=args.scheduler),
                          engine=args.engine, ocs_fail=ocs_fail)
         except CrossSubSwitchError as e:
             sys.exit(f"error: {e}\n(an ocs_array job must fit one "

@@ -46,6 +46,7 @@ def fleet_params(args, backend):
                        policy=args.policy, ocs_latency=args.ocs_latency,
                        gpu=args.gpu, backend=backend,
                        radix=args.radix if backend == "ocs_array" else None,
+                       scheduler=args.scheduler,
                        handoff_interval_s=args.flush,
                        ttft_slo_s=args.slo)
 
@@ -106,6 +107,10 @@ def main():
     ap.add_argument("--backend", default="crossbar_ocs", choices=BACKENDS)
     ap.add_argument("--radix", type=int, default=64,
                     help="ocs_array sub-switch radix")
+    ap.add_argument("--scheduler", default="phase_boundary",
+                    choices=["phase_boundary", "per_collective"],
+                    help="circuit-scheduling granularity for reconfiguring "
+                         "replica pools (DESIGN.md §13)")
     ap.add_argument("--compare", action="store_true",
                     help="run every backend and print the power tradeoff")
     args = ap.parse_args()

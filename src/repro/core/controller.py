@@ -77,7 +77,7 @@ class Controller:
                    asym_way: int = -1, now: float = 0.0,
                    ocs_fail: Optional[Callable[[int], bool]] = None,
                    ways: Optional[Sequence[int]] = None,
-                   weight: int = 1) -> WriteResult:
+                   weight: int = 1, variant: int = 0) -> WriteResult:
         """One rank's (or rank-class representative's) barrier arrival.
 
         ``weight`` is the rank-equivalence-class cardinality: the op stream
@@ -88,6 +88,12 @@ class Controller:
         invariant (DESIGN.md §8).  ``weight=1`` is the uncollapsed per-rank
         protocol and the two are observationally identical at the
         controller (same barrier/dispatch sequence, same timestamps).
+
+        ``variant`` selects the circuit-round matching the write requests
+        (DESIGN.md §13): 0 is the canonical ring; consecutive rounds of a
+        per-collective decomposition carry distinct variants, so a round
+        on an unchanged digit is still a real reconfiguration instead of
+        being suppressed as a digit no-op.
         """
         assert not self.static, \
             "topo_write on a static-fabric job (shims must run STATIC)"
@@ -145,7 +151,8 @@ class Controller:
                 reconfigured = True
                 continue
             prev = self.topo[o.rail_id]
-            new_topo = prev.with_ways(ways, g.digit)
+            new_topo = prev.with_ways(ways, g.digit,
+                                      0 if g.digit == PP_DIGIT else variant)
             if new_topo == prev:
                 handled.append((o, prev))
                 continue

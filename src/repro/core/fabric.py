@@ -1,255 +1,426 @@
-"""Photonic-rail collectives: the paper's datapath, realized in JAX.
+"""The rail fabric, behind ONE import surface (DESIGN.md §10).
 
-An OCS provides a *matching* between rail ports at any instant.  The only
-collectives that are legal on such a fabric are chains of point-to-point
-transfers along a ring — which in JAX is exactly ``jax.lax.ppermute`` inside
-``shard_map``.  This module implements the rail datapath as ppermute rings:
+``repro.core.fabric`` is the canonical module for everything "fabric":
 
-  ring_all_gather      (FSDP fwd param gather; paper Fig 3 "AllGather")
-  ring_reduce_scatter  (FSDP bwd gradient scatter; derived as the *linear
-                        transpose* of ring_all_gather, so autodiff through a
-                        fwd gather emits precisely this ring — the paper's
-                        Fig 3 traffic falls out of the chain rule)
-  ring_all_reduce      (optimizer-step sync ARs; RS + AG composition)
-  ring_all_to_all      (ring-forwarded AllToAll, paper §7: O(N) hops —
-                        provided for completeness; EP stays in scale-up)
-  shift                (PP Send/Recv and hierarchical pod rings)
+* the declarative :class:`FabricSpec` the simulator times AND the cost
+  model bills, plus the :class:`SwitchBackend` family behind every rail
+  (crossbar OCS, ACOS-style OCS array, patch panel, packet switch) —
+  defined below, jax-free, importable from benchmarks and CI;
+* the JAX datapath (``Fabric``, ``ring_all_gather``, ``ring_perm``, ...)
+  — implemented in :mod:`repro.core._fabric_rings` and loaded LAZILY via
+  module ``__getattr__`` (PEP 562), so ``from repro.core.fabric import
+  FabricSpec`` never imports jax while ``from repro.core.fabric import
+  Fabric`` still works for datapath users.
 
-The electrical baseline (``EPSFabric``) exposes the same interface with
-XLA's native free-form collectives (packet-switched all-to-all connectivity:
-any algorithm is legal).  Both run under the same partial-manual shard_map:
-rail axes are manual, the scale-up ``model`` axis stays GSPMD-auto.
+``repro.core.fabricspec`` (the spec's former home) remains as a thin
+deprecation alias.
 
-A ``Fabric`` may span several rail axes (("pod", "data") in multi-pod mode);
-gathers compose minor-to-major so the flat shard index is major-axis-first,
-and reduce-scatter (being the transpose of the composition) automatically
-runs major-to-minor — a hierarchical ring matching the paper's cross-pod DP.
+The paper's two headline results are computed from the same hardware:
+the <6% training overhead (Figs 10-13) comes from simulating a switch's
+reconfiguration behaviour, and the 23x/4x power/cost savings (Fig 14)
+from pricing that switch's ports.  Historically this repo described the
+fabric twice — ``SimParams.mode`` strings on the timing side and
+``costmodel`` part-name strings on the billing side — which could drift.
+:class:`FabricSpec` is the one declarative object both sides consume:
+
+    switch technology      which :class:`SwitchBackend` the rails run
+    radix                  ports per (sub-)switch — ACOS-style arrays of
+                           small OCSes are ``ocs_array`` with a small radix
+    reconfig-latency model reconfig_latency + nic_linkup seconds/program
+    scheduler              circuit-scheduling granularity (DESIGN.md §13):
+                           ``phase_boundary`` (paper default) or
+                           ``per_collective`` (PCCL-style rounds)
+    per-port cost/power    ``part`` names a costmodel.PARTS entry; the
+                           Fig-14 bill is derived from THIS spec
+
+``SwitchBackend`` is the vendor-neutral switch interface extracted from
+the original in-memory OCS driver (TL1/SCPI/NETCONF in hardware).  Four
+implementations cover the paper's design space plus the related work's
+(ACOS arrays, PCCL per-collective circuits, static baselines):
+
+    CrossbarOCS   one non-blocking crossbar per rail (the paper's OCS;
+                  previously ``orchestrator.OCSDriver`` — behaviour is
+                  bit-identical, the class merely moved and was renamed)
+    OCSArray      an array of radix-limited sub-switches (ACOS): a
+                  circuit spanning sub-switch boundaries is physically
+                  impossible and is REJECTED (CrossSubSwitchError),
+                  surfacing the admission/fragmentation effects a single
+                  big crossbar hides; disjoint sub-switches reconfigure
+                  in parallel (independent busy clocks)
+    PatchPanel    passive fibre panel: circuits are patched once when a
+                  job registers and unpatched when it leaves; a
+                  reconfiguration dispatch (disconnect+connect in one
+                  program) raises StaticFabricError — ``oneshot`` runs
+                  on THIS through the real control plane instead of a
+                  closed-form bypass
+    PacketSwitch  electrical packet switch: always-connected, programs
+                  are accepted but free and hold no circuit state —
+                  ``native`` through the plane too
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass
-from typing import Tuple
+import math
+from dataclasses import dataclass, replace
+from typing import Dict, List, Optional, Tuple
 
-import jax
-import jax.numpy as jnp
+from repro.core.scheduler import PHASE_BOUNDARY, SCHEDULERS
 
-# Canonical re-export (DESIGN.md §10): the declarative switch-hardware
-# spec and the SwitchBackend family live in the jax-free
-# ``repro.core.fabricspec`` (the simulator/benchmarks must never pull in
-# jax); datapath users spell it ``repro.core.fabric.FabricSpec``.
-from repro.core.fabricspec import (  # noqa: F401
-    CrossbarOCS, FabricSpec, OCSArray, PacketSwitch, PatchPanel,
-    SwitchBackend)
+CROSSBAR_OCS = "crossbar_ocs"
+OCS_ARRAY = "ocs_array"
+PATCH_PANEL = "patch_panel"
+PACKET = "packet"
+
+TECHNOLOGIES = (CROSSBAR_OCS, OCS_ARRAY, PATCH_PANEL, PACKET)
 
 
-def ring_perm(n: int, shift: int = 1):
-    return [(i, (i + shift) % n) for i in range(n)]
+class StaticFabricError(RuntimeError):
+    """A reconfiguration dispatch reached a fabric that cannot move."""
 
 
-# ---------------------------------------------------------------------------
-# single-axis rings
-# ---------------------------------------------------------------------------
+class CrossSubSwitchError(ValueError):
+    """A circuit would span two sub-switches of an OCSArray."""
 
 
-def _merge_axis(buf, axis: int):
-    """[n, ...] -> merge the leading stack dim into dim `axis` of the rest."""
-    n = buf.shape[0]
-    rest = buf.shape[1:]
-    moved = jnp.moveaxis(buf, 0, axis)  # [..., n, s, ...]
-    new_shape = rest[:axis] + (n * rest[axis],) + rest[axis + 1:]
-    return moved.reshape(new_shape)
+class SwitchBackend:
+    """Vendor-neutral switch interface (extracted from the original OCS
+    driver): ``program(disconnect, connect, now) -> done`` plus circuit
+    and timing state.  Subclasses model the technologies above; the
+    orchestrator only ever talks to this interface."""
+
+    #: False for fabrics with no circuit state to program (PacketSwitch):
+    #: the orchestrator skips programming AND programming counters, so
+    #: telemetry honestly reports zero ports programmed.
+    programmable = True
+
+    def __init__(self, n_ports: int, reconfig_latency: float = 0.0):
+        self.n_ports = n_ports
+        self.reconfig_latency = reconfig_latency
+        self.circuits: Dict[int, int] = {}       # src -> dst
+        self.n_program_calls = 0
+        self.n_ports_programmed = 0
+        self.busy_until = 0.0
+        # reconfiguration serialization: programs that found the switch
+        # mid-reconfiguration and had to queue behind it.  The switch has
+        # no tenant concept, so this counts queueing behind ANY in-flight
+        # program — another job's (cluster contention) or this job's own
+        # back-to-back dispatches — a property of the switch, not of who
+        # asked.
+        self.n_queued_programs = 0
+        self.queue_wait_s = 0.0
+
+    def program(self, disconnect: List[int], connect: List[Tuple[int, int]],
+                now: float = 0.0) -> float:
+        """Apply a partial reprogram; returns completion time.
+
+        Non-blocking: ports not named are untouched.  Raises on conflicts
+        (connecting a port already in another circuit) — G-invariant
+        violations surface as errors, not silent corruption.
+        """
+        self._apply_circuits(disconnect, connect)
+        self.n_program_calls += 1
+        self.n_ports_programmed += len(disconnect) + len(connect)
+        wait = max(0.0, self.busy_until - now)
+        if wait > 0.0:
+            self.n_queued_programs += 1
+            self.queue_wait_s += wait
+        done = max(now, self.busy_until) + self.reconfig_latency
+        self.busy_until = done
+        return done
+
+    def _apply_circuits(self, disconnect: List[int],
+                        connect: List[Tuple[int, int]]) -> None:
+        for p in disconnect:
+            self.circuits.pop(p, None)
+        for a, b in connect:
+            if a in self.circuits:
+                raise ValueError(f"port {a} already connected")
+            if not (0 <= a < self.n_ports and 0 <= b < self.n_ports):
+                raise ValueError(f"port out of range: {(a, b)}")
+            self.circuits[a] = b
+
+    def connected(self, a: int) -> Optional[int]:
+        return self.circuits.get(a)
 
 
-def _ring_all_gather_one_dir(x, axis_name: str, axis_size: int,
-                             direction: int = 1):
-    """n-1 ppermute hops in one ring direction -> stacked [n, ...x]."""
-    idx = jax.lax.axis_index(axis_name)
-    perm = ring_perm(axis_size, direction)
-    buf0 = jnp.zeros((axis_size,) + x.shape, x.dtype)
-    buf0 = jax.lax.dynamic_update_slice_in_dim(buf0, x[None], idx, 0)
-
-    def step(carry, k):
-        shard, buf = carry
-        shard = jax.lax.ppermute(shard, axis_name, perm)
-        # after k hops along direction d, the resident shard originated at
-        # rank (idx - d*k) mod n; + n^2 keeps the dividend positive
-        src = jax.lax.rem(idx - direction * k + axis_size * axis_size,
-                          axis_size)
-        buf = jax.lax.dynamic_update_slice_in_dim(buf, shard[None], src, 0)
-        return (shard, buf), None
-
-    (_, buf), _ = jax.lax.scan(step, (x, buf0),
-                               jnp.arange(1, axis_size, dtype=jnp.int32))
-    return buf
+class CrossbarOCS(SwitchBackend):
+    """One non-blocking crossbar per rail — the paper's OCS and the
+    default backend.  This IS the original ``OCSDriver`` (renamed; the
+    old name stays importable from ``repro.core.orchestrator``)."""
 
 
-def ring_all_gather(x, axis_name: str, axis_size: int, axis: int = 0,
-                    bidirectional: bool = False):
-    """Ring AllGather of shard ``x`` along dim ``axis`` (result n× larger).
+class OCSArray(SwitchBackend):
+    """ACOS-style array of radix-limited sub-switches sharing one rail's
+    port space: port ``p`` lives on sub-switch ``p // radix``.
 
-    Circuit-legal: degree 2 (one neighbour each way).  With
-    ``bidirectional=True`` the shard is split in half and the halves travel
-    opposite ring directions concurrently, using BOTH ICI links — per-link
-    bytes halve (§Perf H3; the unidirectional ring is the paper-faithful
-    baseline, which leaves the second link dark).
+    * a circuit spanning sub-switch boundaries is physically impossible
+      and raises :class:`CrossSubSwitchError` — the admission effect the
+      single crossbar hides (placements/grants must fit a sub-switch);
+    * each sub-switch has its own reconfiguration clock: programs that
+      touch disjoint sub-switches do not serialize, so an array can be
+      LESS contended than one big crossbar under multi-tenant load.
     """
-    if axis_size == 1:
-        return x
-    if bidirectional and x.shape[axis] % 2 == 0 and axis_size > 2:
-        half = x.shape[axis] // 2
-        lo = jax.lax.slice_in_dim(x, 0, half, axis=axis)
-        hi = jax.lax.slice_in_dim(x, half, 2 * half, axis=axis)
-        buf_lo = _ring_all_gather_one_dir(lo, axis_name, axis_size, 1)
-        buf_hi = _ring_all_gather_one_dir(hi, axis_name, axis_size, -1)
-        buf = jnp.concatenate([buf_lo, buf_hi], axis=axis + 1)
-        return _merge_axis(buf, axis)
-    buf = _ring_all_gather_one_dir(x, axis_name, axis_size, 1)
-    return _merge_axis(buf, axis)
+
+    def __init__(self, n_ports: int, radix: int,
+                 reconfig_latency: float = 0.0):
+        assert 1 <= radix <= n_ports, (radix, n_ports)
+        super().__init__(n_ports, reconfig_latency)
+        self.radix = radix
+        self.n_sub = math.ceil(n_ports / radix)
+        self.sub_busy_until = [0.0] * self.n_sub
+        self.n_rejected_programs = 0
+
+    def sub_switch(self, port: int) -> int:
+        return port // self.radix
+
+    def fits(self, ports) -> bool:
+        """True when ``ports`` all sit inside ONE sub-switch — THE
+        placement rule shared by cluster admission (ClusterSim._admit)
+        and plane registration (ControlPlane._check_subswitch_fit):
+        circuits are only ever wired among a job's own ports, so a
+        one-sub-switch port set makes every dispatchable topology
+        (including the §4.2 fallback ring) physically wireable."""
+        return self.sub_switch(min(ports)) == self.sub_switch(max(ports))
+
+    def program(self, disconnect: List[int], connect: List[Tuple[int, int]],
+                now: float = 0.0) -> float:
+        spanning = [(a, b) for a, b in connect
+                    if self.sub_switch(a) != self.sub_switch(b)]
+        if spanning:
+            self.n_rejected_programs += 1
+            raise CrossSubSwitchError(
+                f"circuits span sub-switch boundaries (radix "
+                f"{self.radix}): {spanning[:4]}"
+                f"{'...' if len(spanning) > 4 else ''}")
+        self._apply_circuits(disconnect, connect)
+        self.n_program_calls += 1
+        self.n_ports_programmed += len(disconnect) + len(connect)
+        touched = sorted({self.sub_switch(p) for p in disconnect}
+                         | {self.sub_switch(a) for a, _ in connect})
+        done = now
+        for s in touched:
+            wait = max(0.0, self.sub_busy_until[s] - now)
+            if wait > 0.0:
+                self.n_queued_programs += 1
+                self.queue_wait_s += wait
+            fin = max(now, self.sub_busy_until[s]) + self.reconfig_latency
+            self.sub_busy_until[s] = fin
+            done = max(done, fin)
+        self.busy_until = max(self.sub_busy_until)
+        return done
 
 
-def ring_reduce_scatter(x, axis_name: str, axis_size: int, axis: int = 0):
-    """Ring ReduceScatter: the linear transpose of ``ring_all_gather``.
+class PatchPanel(SwitchBackend):
+    """Passive fibre patch panel: circuits are patched in when a job
+    registers (connect-only program) and unpatched at departure
+    (disconnect-only program).  A reconfiguration dispatch — one program
+    that both disconnects and connects — is a runtime topology change a
+    patch panel cannot perform and raises :class:`StaticFabricError`.
+    The one-time patching costs ``reconfig_latency`` like any program
+    (job setup, off the training critical path)."""
 
-    x full along dim ``axis`` -> summed shard (1/n size).  Deriving it as a
-    transpose guarantees AG/RS are exact adjoints (gradient consistency).
-    """
-    if axis_size == 1:
-        return x
-    shard_shape = list(x.shape)
-    assert shard_shape[axis] % axis_size == 0, (x.shape, axis, axis_size)
-    shard_shape[axis] //= axis_size
-    f = functools.partial(ring_all_gather, axis_name=axis_name,
-                          axis_size=axis_size, axis=axis)
-    (out,) = jax.linear_transpose(
-        f, jax.ShapeDtypeStruct(tuple(shard_shape), x.dtype))(x)
-    return out
-
-
-def ring_all_reduce(x, axis_name: str, axis_size: int):
-    """Ring AllReduce = flat ReduceScatter + AllGather (bandwidth-optimal)."""
-    if axis_size == 1:
-        return x
-    flat = x.reshape(-1)
-    pad = (-flat.shape[0]) % axis_size
-    if pad:
-        flat = jnp.pad(flat, (0, pad))
-    shard = ring_reduce_scatter(flat, axis_name, axis_size)
-    full = ring_all_gather(shard, axis_name, axis_size)
-    if pad:
-        full = full[:-pad]
-    return full.reshape(x.shape)
+    def program(self, disconnect: List[int], connect: List[Tuple[int, int]],
+                now: float = 0.0) -> float:
+        if disconnect and connect:
+            raise StaticFabricError(
+                "patch panel cannot reconfigure at runtime "
+                f"({len(disconnect)} disconnects + {len(connect)} "
+                "connects in one program)")
+        return super().program(disconnect, connect, now)
 
 
-def ring_all_to_all(xstack, axis_name: str, axis_size: int):
-    """Ring-forwarded AllToAll on stacked chunks [n, ...].
+class PacketSwitch(SwitchBackend):
+    """Electrical packet switch: every port pair is always connected, so
+    there are no circuits to hold and nothing to program — programs are
+    accepted, cost nothing, and leave no state (``native`` mode's fabric,
+    now behind the same interface as the photonic ones)."""
 
-    Slot j of the result holds the chunk rank j addressed to this rank.
-    Costs n-1 hops carrying the *whole* residual buffer — the ring
-    bandwidth tax the paper notes in §7 (hence EP belongs in scale-up).
-    """
-    if axis_size == 1:
-        return xstack
-    idx = jax.lax.axis_index(axis_name)
-    perm = ring_perm(axis_size)
-    own = jax.lax.dynamic_index_in_dim(xstack, idx, 0)
-    out0 = jnp.zeros_like(xstack)
-    out0 = jax.lax.dynamic_update_slice_in_dim(out0, own, idx, 0)
+    programmable = False
 
-    def step(carry, k):
-        buf, out = carry
-        buf = jax.lax.ppermute(buf, axis_name, perm)
-        # buf now came from rank (idx - k); its slot `idx` is for us
-        contrib = jax.lax.dynamic_index_in_dim(buf, idx, 0)
-        src = jax.lax.rem(idx - k + axis_size, axis_size)
-        out = jax.lax.dynamic_update_slice_in_dim(out, contrib, src, 0)
-        return (buf, out), None
+    def program(self, disconnect: List[int], connect: List[Tuple[int, int]],
+                now: float = 0.0) -> float:
+        return now
 
-    (_, out), _ = jax.lax.scan(step, (xstack, out0),
-                               jnp.arange(1, axis_size, dtype=jnp.int32))
-    return out
-
-
-def shift(x, axis_name: str, axis_size: int, delta: int = 1):
-    """Point-to-point ring shift (PP Send/Recv, pod rings)."""
-    if axis_size == 1:
-        return x
-    return jax.lax.ppermute(x, axis_name, ring_perm(axis_size, delta))
+    def connected(self, a: int) -> Optional[int]:
+        return None
 
 
 # ---------------------------------------------------------------------------
-# fabric interface (photonic rings vs electrical native)
+# the declarative spec
 # ---------------------------------------------------------------------------
+
+# which backend each SimParams.mode naturally runs on, and which others
+# are physically coherent (the DESIGN.md §10 mode x backend matrix).
+# opus modes need a fabric that can move; native needs always-on
+# connectivity only a packet switch provides; oneshot sets circuits once,
+# which any circuit-holding fabric can do (a patch panel is merely the
+# cheapest hardware that suffices).
+NATURAL_BACKEND = {
+    "native": PACKET,
+    "oneshot": PATCH_PANEL,
+    "opus": CROSSBAR_OCS,
+    "opus_prov": CROSSBAR_OCS,
+}
+MODE_BACKENDS = {
+    "native": (PACKET,),
+    "oneshot": (PATCH_PANEL, CROSSBAR_OCS, OCS_ARRAY),
+    "opus": (CROSSBAR_OCS, OCS_ARRAY),
+    "opus_prov": (CROSSBAR_OCS, OCS_ARRAY),
+}
+
+# default costmodel.PARTS entry per technology (overridable per spec)
+DEFAULT_PART = {
+    CROSSBAR_OCS: "ocs",
+    OCS_ARRAY: "ocs_small",
+    PATCH_PANEL: "patch_panel",
+    PACKET: "eps_400g",
+}
 
 
 @dataclass(frozen=True)
-class Fabric:
-    """Rail collectives over one or more mesh axes (major axis first)."""
+class FabricSpec:
+    """Declarative description of one rail fabric — the ONE object the
+    simulator times and the cost model bills (DESIGN.md §10).
 
-    axes: Tuple[str, ...]
-    sizes: Tuple[int, ...]
-    kind: str = "photonic"  # "photonic" | "eps"
-    bidirectional: bool = False  # use both ICI links per ring (§Perf H3)
+    ``radix`` bounds the ports per (sub-)switch: ``None`` means one
+    switch spans the whole rail (crossbar / packet), a value means
+    OCSArray sub-switches of that size AND ``ceil(rail_size/radix)``
+    chassis in the Fig-14 bill.  ``scheduler`` names the circuit-
+    scheduling granularity (``repro.core.scheduler``, DESIGN.md §13):
+    ``phase_boundary`` reconfigures at parallelism-phase boundaries (the
+    paper), ``per_collective`` per collective round (PCCL) — the latter
+    needs a fabric whose circuits can move mid-job.  ``part`` names the
+    ``sim.costmodel.PARTS`` entry pricing each port; ``ports_per_link``
+    is the OCS fibre ports one NIC link occupies (2 for 800G links).
+    """
+
+    technology: str = CROSSBAR_OCS
+    n_rails: int = 1
+    reconfig_latency: float = 0.0     # seconds per switch program
+    nic_linkup: float = 0.0           # §5.1 firmware link-up penalty
+    radix: Optional[int] = None       # ports per sub-switch (OCSArray)
+    scheduler: str = PHASE_BOUNDARY   # circuit-scheduling granularity (§13)
+    part: Optional[str] = None        # costmodel part; None = tech default
+    ports_per_link: int = 1
+
+    def __post_init__(self):
+        assert self.technology in TECHNOLOGIES, self.technology
+        assert self.n_rails >= 1, self.n_rails
+        assert self.ports_per_link >= 1, self.ports_per_link
+        if self.scheduler not in SCHEDULERS:
+            raise ValueError(
+                f"unknown scheduler {self.scheduler!r}; "
+                f"one of {sorted(SCHEDULERS)}")
+        if self.scheduler != PHASE_BOUNDARY and not self.reconfigurable:
+            raise ValueError(
+                f"scheduler {self.scheduler!r} reprograms circuits per "
+                f"collective round; a {self.technology} fabric cannot move")
+        if self.technology == OCS_ARRAY:
+            assert self.radix is not None, \
+                "ocs_array needs an explicit sub-switch radix"
+            assert self.radix >= 1, self.radix
+        elif self.radix is not None:
+            # the bill would size ceil(rail_size/radix) chassis while the
+            # timing side built one whole-rail switch — exactly the
+            # timed-vs-billed drift this spec exists to prevent
+            raise ValueError(
+                f"radix only applies to ocs_array, not {self.technology}")
+
+    # -- mode x backend matrix ----------------------------------------------
+    @property
+    def reconfigurable(self) -> bool:
+        """Can circuits change during a job? (patch panels hold them
+        static; packet switches have none at all)"""
+        return self.technology in (CROSSBAR_OCS, OCS_ARRAY)
 
     @property
-    def n_shards(self) -> int:
-        out = 1
-        for s in self.sizes:
-            out *= s
-        return out
+    def circuit_switched(self) -> bool:
+        """Do collectives EXECUTE on physical circuits (rings/matchings)
+        rather than packet routes?  This is where the scheduler axis has
+        effect: a ring-executed all-to-all pays the §7 forwarding tax a
+        packet fabric never sees."""
+        return self.technology != PACKET
 
-    # -- AllGather: minor axis first, so flat shard index is major-first --
-    def all_gather(self, x, axis: int = 0):
-        for name, size in zip(reversed(self.axes), reversed(self.sizes)):
-            if self.kind == "photonic":
-                x = ring_all_gather(x, name, size, axis=axis,
-                                    bidirectional=self.bidirectional)
-            else:
-                x = jax.lax.all_gather(x, name, axis=axis, tiled=True)
-        return x
+    def validate_mode(self, mode: str) -> "FabricSpec":
+        allowed = MODE_BACKENDS.get(mode)
+        if allowed is None:
+            raise ValueError(f"unknown mode {mode!r}")
+        if self.technology not in allowed:
+            raise ValueError(
+                f"mode {mode!r} cannot run on a {self.technology} backend "
+                f"(allowed: {', '.join(allowed)})")
+        if self.scheduler != PHASE_BOUNDARY and mode not in ("opus",
+                                                             "opus_prov"):
+            raise ValueError(
+                f"scheduler {self.scheduler!r} needs shims that write "
+                f"(opus/opus_prov), not mode {mode!r} — a static-fabric "
+                "mode never reprograms a circuit round")
+        return self
 
-    def reduce_scatter(self, x, axis: int = 0):
-        if self.kind == "photonic":
-            shard_shape = list(x.shape)
-            shard_shape[axis] //= self.n_shards
-            f = functools.partial(self.all_gather, axis=axis)
-            (out,) = jax.linear_transpose(
-                f, jax.ShapeDtypeStruct(tuple(shard_shape), x.dtype))(x)
-            return out
-        for name in self.axes:  # major-to-minor (transpose order)
-            x = jax.lax.psum_scatter(x, name, scatter_dimension=axis,
-                                     tiled=True)
-        return x
+    @classmethod
+    def for_mode(cls, mode: str, *, ocs_latency: float = 0.0,
+                 nic_linkup: float = 0.0, n_rails: int = 1,
+                 technology: Optional[str] = None,
+                 radix: Optional[int] = None,
+                 scheduler: Optional[str] = None,
+                 part: Optional[str] = None,
+                 ports_per_link: int = 1) -> "FabricSpec":
+        """The back-compat constructor behind ``SimParams.mode``: map a
+        mode string (plus the legacy latency knobs) onto its natural
+        backend, or a compatible override via ``technology``."""
+        tech = technology if technology is not None else NATURAL_BACKEND[mode]
+        return cls(technology=tech, n_rails=n_rails,
+                   reconfig_latency=ocs_latency, nic_linkup=nic_linkup,
+                   radix=radix,
+                   scheduler=(scheduler if scheduler is not None
+                              else PHASE_BOUNDARY),
+                   part=part,
+                   ports_per_link=ports_per_link).validate_mode(mode)
 
-    def all_reduce(self, x):
-        if self.kind == "photonic":
-            for name, size in zip(self.axes, self.sizes):
-                x = ring_all_reduce(x, name, size)
-            return x
-        return jax.lax.psum(x, self.axes)
+    def with_rails(self, n_rails: int) -> "FabricSpec":
+        return replace(self, n_rails=n_rails)
 
-    def pmax(self, x):
-        """Small-stat max (decode merge); mgmt-class traffic."""
-        return jax.lax.pmax(x, self.axes)
+    # -- the timing side ------------------------------------------------------
+    @property
+    def program_latency(self) -> float:
+        return self.reconfig_latency + self.nic_linkup
 
-    def all_to_all(self, xstack):
-        assert len(self.axes) == 1, "a2a spans a single rail axis"
-        if self.kind == "photonic":
-            return ring_all_to_all(xstack, self.axes[0], self.sizes[0])
-        return jax.lax.all_to_all(xstack, self.axes[0], split_axis=0,
-                                  concat_axis=0, tiled=False)
+    def make_backend(self, n_ports: int) -> SwitchBackend:
+        """One rail's switch: the simulator's per-rail backend instance."""
+        if self.technology == CROSSBAR_OCS:
+            return CrossbarOCS(n_ports, reconfig_latency=self.program_latency)
+        if self.technology == OCS_ARRAY:
+            return OCSArray(n_ports, radix=min(self.radix, n_ports),
+                            reconfig_latency=self.program_latency)
+        if self.technology == PATCH_PANEL:
+            return PatchPanel(n_ports, reconfig_latency=self.program_latency)
+        return PacketSwitch(n_ports, reconfig_latency=0.0)
 
-    def shift(self, x, delta: int = 1, axis_idx: int = -1):
-        """Shift along one rail axis (default: minor axis)."""
-        name = self.axes[axis_idx]
-        size = self.sizes[axis_idx]
-        if self.kind == "photonic":
-            return shift(x, name, size, delta)
-        return jax.lax.ppermute(x, name, ring_perm(size, delta))
+    # -- the billing side -----------------------------------------------------
+    @property
+    def part_name(self) -> str:
+        return self.part if self.part is not None \
+            else DEFAULT_PART[self.technology]
 
-    def axis_index(self):
-        """Flat shard index (major axis first)."""
-        idx = jnp.int32(0)
-        for name, size in zip(self.axes, self.sizes):
-            idx = idx * size + jax.lax.axis_index(name)
-        return idx
+
+# ---------------------------------------------------------------------------
+# lazy datapath (PEP 562): jax loads only when a datapath name is touched
+# ---------------------------------------------------------------------------
+
+_DATAPATH_NAMES = (
+    "Fabric", "ring_perm", "ring_all_gather", "ring_reduce_scatter",
+    "ring_all_reduce", "ring_all_to_all", "shift",
+    "_merge_axis", "_ring_all_gather_one_dir",
+)
+
+
+def __getattr__(name: str):
+    if name in _DATAPATH_NAMES:
+        from repro.core import _fabric_rings
+        value = getattr(_fabric_rings, name)
+        globals()[name] = value       # cache: subsequent imports are direct
+        return value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_DATAPATH_NAMES))

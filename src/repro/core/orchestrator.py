@@ -20,15 +20,26 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Tuple
 
-from repro.core.fabricspec import CrossbarOCS, SwitchBackend
+from repro.core.fabric import SwitchBackend
 from repro.core.topo import (JobPlacement, SubMapping, TopoId, affected_ways,
                              build_submapping, ring_pairs)
 
-# Back-compat name: the in-memory OCS driver grew into the SwitchBackend
-# family (DESIGN.md §10) and its crossbar incarnation now lives in
-# repro.core.fabricspec as CrossbarOCS — bit-identical behaviour, same
-# constructor.  Existing callers keep importing OCSDriver from here.
-OCSDriver = CrossbarOCS
+
+def __getattr__(name: str):
+    # Deprecated name: the in-memory OCS driver grew into the
+    # SwitchBackend family (DESIGN.md §10) and its crossbar incarnation
+    # lives in repro.core.fabric as CrossbarOCS — bit-identical
+    # behaviour, same constructor.
+    if name == "OCSDriver":
+        import warnings
+
+        from repro.core.fabric import CrossbarOCS
+        warnings.warn(
+            "orchestrator.OCSDriver is deprecated; import CrossbarOCS "
+            "from repro.core.fabric",
+            DeprecationWarning, stacklevel=2)
+        return CrossbarOCS
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclass
@@ -192,7 +203,7 @@ class RailOrchestrator:
         one sanctioned cross-tenant operation, and it still never names a
         port owned by a third party.  Source ports are disconnected from
         their current circuits (the src ring is broken until
-        :meth:`restore`); on an :class:`~repro.core.fabricspec.OCSArray`,
+        :meth:`restore`); on an :class:`~repro.core.fabric.OCSArray`,
         pairs spanning sub-switch boundaries cannot hold a circuit and
         are reported as relayed (routed at reduced bandwidth) instead of
         raising.  A circuit-free fabric (PacketSwitch) relays everything:

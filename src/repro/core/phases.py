@@ -66,6 +66,11 @@ class CommOp:
     bytes_per_gpu: float
     scale: str              # "scale_out" | "scale_up" | "mgmt"
     compute_before: float = 0.0  # seconds of compute between prev op and this
+    # circuit-round matching this op runs on (DESIGN.md §13): 0 = the
+    # canonical shift-1 ring (every op before per-collective scheduling);
+    # v>0 = shift-v round of a round-robin all-to-all; v<0 = XOR round of
+    # recursive halving/doubling at distance -v
+    variant: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -119,6 +124,21 @@ def pp_send_bytes(job: JobConfig) -> float:
 def mgmt_ar_bytes(job: JobConfig) -> float:
     """Optimizer-step synchronization AllReduce (<1 MB class, Fig 4b)."""
     return 64e3
+
+
+def ep_a2a_bytes(job: JobConfig) -> float:
+    """Per-layer EP all-to-all (MoE dispatch or combine), DIRECT bytes
+    received per GPU: each GPU exchanges its top_k-routed activations
+    with the other ep-1 experts' hosts ((ep-1)/ep of the routed bytes
+    leave the GPU).  This is the packet-fabric cost; a circuit fabric
+    pays the scheduler-dependent execution cost on top (ring forwarding
+    multiplies it by ep, per-collective rounds keep it direct —
+    repro.core.scheduler)."""
+    moe = job.model.moe
+    assert moe is not None and job.ep > 1, (job.model.name, job.ep)
+    mb_tokens = job.global_batch // job.fsdp // job.microbatches * job.seq_len
+    act = mb_tokens * job.model.d_model * BYTES["bfloat16"] / job.tp
+    return float(act * moe.top_k * (job.ep - 1) / job.ep)
 
 
 # ---------------------------------------------------------------------------
@@ -221,22 +241,37 @@ def iteration_schedule(job: JobConfig, *, t_fwd_layer: float = 0.0,
             if job.pp > 1 and s > 0:
                 emit("pp", "send_recv", s - 1, mb, pp_send_bytes(job),
                      c_fwd if (i == 0 and not bwds) else 0.0)
-        # (2) symmetric traffic of this tick's compute
+        # (2) symmetric traffic of this tick's compute.  An EP-sharded
+        # MoE layer (job.ep > 1) exchanges its routed activations over
+        # the rails twice per MoE layer (dispatch + combine), interleaved
+        # with the layer's FSDP collectives — the fsdp<->ep digit
+        # alternation per-collective scheduling (§13) feeds on.
+        moe = job.model.moe
+        moe_every = moe.moe_every if (job.ep > 1 and moe is not None) else 0
         for s, mb in fwds:
             if job.cp > 1:
                 emit("cp", "all_gather", s, mb,
                      pp_send_bytes(job) * job.cp, 0.0)
-            if job.zero3 and job.fsdp > 1:
-                for _ in range(L):  # per-layer AG overlapped with compute
+            for layer in range(L):
+                if job.zero3 and job.fsdp > 1:
+                    # per-layer AG overlapped with compute
                     emit("fsdp", "all_gather", s, mb, fsdp_ag_bytes(job),
                          t_fwd_layer)
+                if moe_every and layer % moe_every == 0:
+                    emit("ep", "all_to_all", s, mb, ep_a2a_bytes(job), 0.0)
+                    emit("ep", "all_to_all", s, mb, ep_a2a_bytes(job), 0.0)
         for s, mb in bwds:
-            if job.zero3 and job.fsdp > 1:
-                for _ in range(L):  # re-gather + reduce-scatter per layer
+            for layer in range(L):
+                if job.zero3 and job.fsdp > 1:
+                    # re-gather + reduce-scatter per layer
                     emit("fsdp", "all_gather", s, mb, fsdp_ag_bytes(job),
                          t_bwd_layer / 2)
                     emit("fsdp", "reduce_scatter", s, mb,
                          fsdp_rs_bytes(job), t_bwd_layer / 2)
+                if moe_every and layer % moe_every == 0:
+                    # gradients of combine + dispatch retrace the rails
+                    emit("ep", "all_to_all", s, mb, ep_a2a_bytes(job), 0.0)
+                    emit("ep", "all_to_all", s, mb, ep_a2a_bytes(job), 0.0)
             if not job.zero3 and job.fsdp > 1 and mb == m - 1:
                 emit("dp", "all_reduce", s, mb, dp_ar_bytes(job),
                      t_bwd_layer * L)
@@ -319,26 +354,38 @@ def serving_schedule(job: JobConfig, kind: str, *, batch_slots: int = 1,
 
 @dataclass(frozen=True)
 class Phase:
+    """A maximal run of scale-out ops sharing one circuit requirement.
+
+    With per-collective scheduling a "phase" is one *collective round*
+    — the (dim, variant) pair names the matching the rails must hold —
+    and classic phase-boundary scheduling is the degenerate case where
+    every op carries variant 0 and runs merge purely by dim.
+    """
+
     dim: str
     start_idx: int          # first op uid of the phase
     end_idx: int            # last op uid (inclusive)
     ways: Tuple[int, ...]
+    variant: int = 0        # circuit-round matching (see CommOp.variant)
 
 
 def build_phase_table(ops: Iterable[CommOp]) -> List[Phase]:
-    """Group maximal runs of same-dim scale-out ops into phases.
+    """Group maximal runs of same-(dim, variant) scale-out ops into
+    phases (collective rounds, DESIGN.md §13).
 
     Back-to-back PP Send/Recvs (same tick) form one phase — there is no
     idle window between them; the shim still issues per-op topo_writes for
     asymmetric ops (§4.2), which the controller suppresses when digits are
-    unchanged.
+    unchanged.  A variant change within one dim (consecutive circuit
+    rounds of a decomposed collective) starts a NEW phase: each round is
+    a real reconfiguration boundary.
     """
     table: List[Phase] = []
     cur: Optional[List[CommOp]] = None
     for op in ops:
         if op.scale != "scale_out":
             continue
-        if cur and cur[0].dim == op.dim:
+        if cur and cur[0].dim == op.dim and cur[0].variant == op.variant:
             cur.append(op)
         else:
             if cur:
@@ -351,7 +398,7 @@ def build_phase_table(ops: Iterable[CommOp]) -> List[Phase]:
 
 def _mk_phase(ops: List[CommOp]) -> Phase:
     return Phase(ops[0].dim, ops[0].uid, ops[-1].uid,
-                 tuple(sorted({o.way for o in ops})))
+                 tuple(sorted({o.way for o in ops})), ops[0].variant)
 
 
 def count_windows(ops: Iterable[CommOp]) -> int:
@@ -406,16 +453,28 @@ def count_reconfigs(ops: Iterable[CommOp], n_ways: int) -> int:
     table = build_phase_table(list(ops))
     if not table:
         return 0
-    # two passes: first to find the steady-state end digits, then count
-    digits = [1] * n_ways
+
+    def step(state, p):
+        digits, variants = state
+        nd = phase_digits(p, digits, n_ways)
+        nv = list(variants)
+        if p.dim != "pp":        # circuit-round matching of the sym ways
+            ways = range(n_ways) if -1 in p.ways else p.ways
+            for x in ways:
+                if 0 <= x < n_ways:
+                    nv[x] = p.variant
+        return nd, nv
+
+    # two passes: first to find the steady-state end state, then count
+    state = ([1] * n_ways, [0] * n_ways)
     for p in table:
-        digits = phase_digits(p, digits, n_ways)
+        state = step(state, p)
     n = 0
     for p in table:
-        nd = phase_digits(p, digits, n_ways)
-        if nd != digits:
+        ns = step(state, p)
+        if ns != state:
             n += 1
-        digits = nd
+        state = ns
     return n
 
 

@@ -4,9 +4,9 @@
 :class:`~repro.core.shim.Shim` per scale-out rank, the per-job
 :class:`~repro.core.controller.Controller`, one
 :class:`~repro.core.orchestrator.RailOrchestrator` driving a
-:class:`~repro.core.fabricspec.SwitchBackend` per rail (which backend —
+:class:`~repro.core.fabric.SwitchBackend` per rail (which backend —
 crossbar OCS, ACOS-style OCS array, patch panel, packet switch — comes
-from the job's :class:`~repro.core.fabricspec.FabricSpec`, DESIGN.md
+from the job's :class:`~repro.core.fabric.FabricSpec`, DESIGN.md
 §10) — from a single :class:`~repro.core.phases.JobConfig`, and exposes
 the narrow event API the simulator (and any future scenario driver)
 programs against:
@@ -49,7 +49,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.controller import Controller, GroupState, WriteResult
-from repro.core.fabricspec import CrossSubSwitchError, FabricSpec, OCSArray
+from repro.core.fabric import CrossSubSwitchError, FabricSpec, OCSArray
 from repro.core.orchestrator import RailOrchestrator
 from repro.core.phases import SYM_DIGITS, CommOp, JobConfig
 from repro.core.shim import DEFAULT, STATIC, Action, Shim
@@ -421,7 +421,8 @@ class ControlPlane:
                 self._wseq[a.group_id][ci] = seq + 1
                 write = self.controller.topo_write(
                     rank, a.group_id, seq, asym_way=a.asym_way, now=now,
-                    ocs_fail=self.ocs_fail, ways=a.ways, weight=weight)
+                    ocs_fail=self.ocs_fail, ways=a.ways, weight=weight,
+                    variant=a.variant)
                 if write.complete:
                     for fn in self.listeners:
                         fn(self, a.group_id, write, now)

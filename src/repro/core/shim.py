@@ -41,20 +41,28 @@ class Action:
     # (one write programs the whole phase's topology), the op's own way for
     # mid-phase per-op PP writes.  () = use the controller group's default.
     ways: Tuple[int, ...] = ()
+    # circuit-round matching the write requests (DESIGN.md §13): 0 = the
+    # canonical ring, nonzero = a per-collective round matching
+    variant: int = 0
 
 
 @dataclass
 class PhaseTableEntry:
-    """(start_gid, start_idx, end_gid, end_idx) per Algorithm 3."""
+    """(start_gid, start_idx, end_gid, end_idx) per Algorithm 3.
+
+    With per-collective scheduling an entry is one collective round; its
+    ``variant`` names the matching the round's topo_write programs."""
 
     dim: str
     start_uid: int
     end_uid: int
     ways: Tuple[int, ...]
+    variant: int = 0
 
 
 def table_from_ops(ops: Sequence[CommOp]) -> List[PhaseTableEntry]:
-    return [PhaseTableEntry(p.dim, p.start_idx, p.end_idx, p.ways)
+    return [PhaseTableEntry(p.dim, p.start_idx, p.end_idx, p.ways,
+                            p.variant)
             for p in build_phase_table(list(ops))]
 
 
@@ -150,7 +158,8 @@ class Shim:
             e = self._entry()
             acts.append(Action("topo_write", group_id=self._gid(op.dim),
                                idx=op.uid, asym_way=op.way,
-                               ways=e.ways if (shift and e) else (op.way,)))
+                               ways=e.ways if (shift and e) else (op.way,),
+                               variant=op.variant))
             self.n_topo_writes += 1
         if shift:
             self.topology_busy = True
@@ -177,7 +186,7 @@ class Shim:
                                    idx=n_uid,
                                    asym_way=nxt.ways[0] if nxt.dim == "pp"
                                    else -1,
-                                   ways=nxt.ways))
+                                   ways=nxt.ways, variant=nxt.variant))
                 self.n_topo_writes += 1
         if shift:
             self.topology_busy = False

@@ -18,6 +18,18 @@ implement the dispatch rules of §4.1:
        changed ways are rewired;
   (ii) asymmetric shifts (a way toggling to/from 0) additionally rewire the
        peer way it is pipeline-connected to.
+
+Per-collective circuit rounds (PCCL mode, DESIGN.md §13) extend the
+encoding with a per-way *variant*: the matching a symmetric digit wires
+within each group.  Variant 0 is the canonical shift-1 ring (the only
+matching phase-boundary scheduling ever uses — an all-zero variant
+vector normalizes away, so pre-variant TopoIds compare and dispatch
+bit-identically).  Variant v>0 is the shift-v ring (round v of a
+round-robin all-to-all: port i wires to port (i+v) mod n).  Variant v<0
+is the XOR matching at distance -v (recursive-halving round: port i
+exchanges with port i^(-v)).  A variant change on an unchanged digit is
+still a real reconfiguration — ``affected_ways`` reports it and the
+orchestrator reprograms the way's matching.
 """
 from __future__ import annotations
 
@@ -29,16 +41,32 @@ PP_DIGIT = 0
 
 @dataclass(frozen=True)
 class TopoId:
-    """digits[way] = owning parallelism for that way (index 0 = stage 0)."""
+    """digits[way] = owning parallelism for that way (index 0 = stage 0).
+
+    ``variants[way]`` selects the matching wired within each group of the
+    owning symmetric dimension (0 = shift-1 ring; v>0 = shift-v ring;
+    v<0 = XOR matching at distance -v; ignored on PP-owned ways).  An
+    all-zero variant vector normalizes to () so phase-boundary TopoIds
+    stay bit-identical to the pre-variant encoding.
+    """
 
     digits: Tuple[int, ...]
+    variants: Tuple[int, ...] = ()
 
     def __post_init__(self):
         assert all(0 <= d <= 9 for d in self.digits), self.digits
+        if self.variants:
+            assert len(self.variants) == len(self.digits), \
+                (self.digits, self.variants)
+            if not any(self.variants):
+                object.__setattr__(self, "variants", ())
 
     @classmethod
     def uniform(cls, n_ways: int, digit: int) -> "TopoId":
         return cls(tuple([digit] * n_ways))
+
+    def variant_of(self, way: int) -> int:
+        return self.variants[way] if self.variants else 0
 
     def encode(self) -> int:
         """Decimal integer; digit position i = way i (way 0 least
@@ -57,16 +85,17 @@ class TopoId:
         assert value == 0, "encoded value wider than n_ways"
         return cls(tuple(ds))
 
-    def with_way(self, way: int, digit: int) -> "TopoId":
-        ds = list(self.digits)
-        ds[way] = digit
-        return TopoId(tuple(ds))
+    def with_way(self, way: int, digit: int, variant: int = 0) -> "TopoId":
+        return self.with_ways((way,), digit, variant)
 
-    def with_ways(self, ways: Sequence[int], digit: int) -> "TopoId":
+    def with_ways(self, ways: Sequence[int], digit: int,
+                  variant: int = 0) -> "TopoId":
         ds = list(self.digits)
+        vs = list(self.variants) if self.variants else [0] * len(ds)
         for w in ways:
             ds[w] = digit
-        return TopoId(tuple(ds))
+            vs[w] = variant
+        return TopoId(tuple(ds), tuple(vs))
 
     @property
     def n_ways(self) -> int:
@@ -84,9 +113,14 @@ def affected_ways(old: TopoId, new: TopoId) -> List[int]:
 
     Asymmetric-to-symmetric shift at way m also disturbs the way(s) that
     were pipeline-connected to m (the adjacent way that was also 0).
+    A variant change on a symmetric way (per-collective circuit round,
+    §13) rewires that way's matching even when the digit is unchanged.
     """
     changed = diff_digits(old, new)
     out = set(changed)
+    out.update(w for w in range(old.n_ways)
+               if new.digits[w] != PP_DIGIT
+               and old.variant_of(w) != new.variant_of(w))
     for w in changed:
         if old.digits[w] == PP_DIGIT and new.digits[w] != PP_DIGIT:
             # leaving PP: the previously-connected neighbour way(s)
@@ -131,6 +165,32 @@ def ring_pairs(ports: Sequence[int]) -> Tuple[PortPair, ...]:
     return tuple((ports[i], ports[(i + 1) % n]) for i in range(n))
 
 
+def matching_pairs(ports: Sequence[int],
+                   variant: int = 0) -> Tuple[PortPair, ...]:
+    """The directed matching a circuit-round variant wires over a group.
+
+    variant 0: the canonical shift-1 ring.  variant v>0: the shift-v
+    ring (round-robin all-to-all round v — every port sends to its v-th
+    successor; gcd(v,n)>1 splits the ring into cycles, still a valid
+    matching).  variant v<0: the XOR exchange at distance -v (recursive
+    halving — port i pairs with port i^(-v); partners beyond the group
+    are left dark that round, as is a shift that lands on itself).
+    """
+    n = len(ports)
+    if n <= 1:
+        return ()
+    if variant == 0:
+        return ring_pairs(ports)
+    if variant > 0:
+        s = variant % n
+        if s == 0:
+            return ()
+        return tuple((ports[i], ports[(i + s) % n]) for i in range(n))
+    d = -variant
+    return tuple((ports[i], ports[i ^ d]) for i in range(n)
+                 if (i ^ d) < n)
+
+
 @dataclass
 class JobPlacement:
     """Which rail ports belong to which (way, symmetric-group) of a job.
@@ -157,15 +217,18 @@ def build_submapping(placement: JobPlacement, topo: TopoId,
                      way: int) -> SubMapping:
     """The port wiring of one way under ``topo``.
 
-    Symmetric digit k: one ring per sym-group of dim k within the way.
+    Symmetric digit k: one matching per sym-group of dim k within the
+    way — the shift-1 ring at variant 0, a shifted/XOR round matching
+    otherwise (per-collective circuit rounds, §13).
     PP digit: each port pairs with the same-index port of the next PP-owned
-    way (activation Send/Recv circuits).
+    way (activation Send/Recv circuits; variants do not apply).
     """
     d = topo.digits[way]
     if d != PP_DIGIT:
+        v = topo.variant_of(way)
         pairs: List[PortPair] = []
         for grp in placement.sym_groups[d][way]:
-            pairs.extend(ring_pairs(grp))
+            pairs.extend(matching_pairs(grp, v))
         return SubMapping(way, d, tuple(pairs))
     # PP: connect to the adjacent PP-owned way (forward direction)
     nxt = way + 1

@@ -40,7 +40,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core import phases as ph
-from repro.core.fabricspec import FabricSpec, OCSArray
+from repro.core.fabric import FabricSpec, OCSArray
 from repro.core.orchestrator import PortAllocator, RailOrchestrator
 from repro.core.plane import ControlPlane
 from repro.sim.opus_sim import (SHIM_MODE, EventEngine, SimParams, SimResult,
@@ -84,11 +84,16 @@ class ClusterParams:
     gpu: str = "h200"
     backend: str = "crossbar_ocs"
     radix: Optional[int] = None   # ocs_array sub-switch radix
+    # circuit-scheduling granularity (DESIGN.md §13) for the reconfiguring
+    # tenants; oneshot tenants patch circuits once and always run
+    # phase_boundary (a static fabric has no rounds to schedule)
+    scheduler: str = "phase_boundary"
 
     def fabric_spec(self) -> FabricSpec:
         return FabricSpec(technology=self.backend, n_rails=self.n_rails,
                           reconfig_latency=self.ocs_latency,
-                          nic_linkup=self.nic_linkup, radix=self.radix)
+                          nic_linkup=self.nic_linkup, radix=self.radix,
+                          scheduler=self.scheduler)
 
 
 @dataclass(frozen=True)
@@ -312,7 +317,14 @@ class ClusterSim:
                           nic_linkup=self.params.nic_linkup,
                           n_rails=self.params.n_rails,
                           backend=self.params.backend,
-                          radix=self.params.radix),
+                          radix=self.params.radix,
+                          # static (oneshot) tenants have no rounds to
+                          # schedule: they stay on phase_boundary even in
+                          # a per_collective cluster
+                          scheduler=(self.params.scheduler
+                                     if rec.spec.mode in ("opus",
+                                                          "opus_prov")
+                                     else None)),
             plane=rec.plane, start=rec.admitted,
             iterations=rec.spec.iterations, **kw)
         return (rec, engine, engine.events(), seq)

@@ -25,7 +25,7 @@ Scaling: one rail per scale-up-domain rank; rail size = #domains; switches
 per rail = ceil(rail_size / ports_per_switch) (single-tier within the
 paper's 128-2,048 GPU range; beyond 18K GPUs per rail see §7).
 
-The bill is derived from the SAME :class:`repro.core.fabricspec.
+The bill is derived from the SAME :class:`repro.core.fabric.
 FabricSpec` the simulator times (DESIGN.md §10): ``rail_fabric`` /
 ``compare`` accept a spec — technology picks the part, ``radix`` sizes
 the chassis count — so the Fig-14 numbers cannot drift from the timed
@@ -38,7 +38,7 @@ import math
 from dataclasses import dataclass
 from typing import Dict, Union
 
-from repro.core.fabricspec import CROSSBAR_OCS, PACKET, FabricSpec
+from repro.core.fabric import CROSSBAR_OCS, PACKET, FabricSpec
 
 
 @dataclass(frozen=True)

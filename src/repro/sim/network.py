@@ -21,7 +21,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.fabricspec import CrossbarOCS
+from repro.core.fabric import CrossbarOCS
 from repro.core.topo import ring_pairs
 
 
@@ -37,7 +37,7 @@ class ReconfigurableBackend:
     """Time-stepped fabric: one active bandwidth matrix at a time.
 
     Reconfiguration *timing* (busy-until semantics) delegates to an
-    internal :class:`~repro.core.fabricspec.CrossbarOCS` — the SAME
+    internal :class:`~repro.core.fabric.CrossbarOCS` — the SAME
     switch model the control plane's orchestrators drive — so the
     ``PlaneBackendBridge`` can never drift from the real OCS driver's
     completion-time arithmetic.  This class adds what the switch model

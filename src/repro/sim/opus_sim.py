@@ -62,7 +62,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core import phases as ph
-from repro.core.fabricspec import FabricSpec
+from repro.core.fabric import FabricSpec
 from repro.core.plane import ControlPlane, build_placement
 from repro.core.shim import DEFAULT, PROVISIONING, STATIC
 from repro.core.windows import TimedOp, Window, windows_of
@@ -80,7 +80,7 @@ PP_OP_CTRL = 0.4e-3
 @dataclass(frozen=True)
 class SimParams:
     """Simulation knobs.  ``mode`` is now a thin back-compat constructor
-    over :class:`~repro.core.fabricspec.FabricSpec`: the mode string plus
+    over :class:`~repro.core.fabric.FabricSpec`: the mode string plus
     the legacy latency knobs resolve (via :meth:`fabric_spec`) to the
     declarative switch-hardware spec every layer consumes — the same
     object ``sim.costmodel.rail_fabric`` bills (one spec, both numbers).
@@ -99,17 +99,24 @@ class SimParams:
     n_rails: int = 1              # rails (switch instances) the job spans
     backend: Optional[str] = None  # SwitchBackend technology override
     radix: Optional[int] = None   # OCSArray sub-switch radix
+    scheduler: Optional[str] = None  # circuit-scheduling granularity (§13)
     fabric: Optional[FabricSpec] = None   # full spec override
 
     def fabric_spec(self) -> FabricSpec:
         """The declarative fabric behind these params (validated against
         the mode x backend matrix)."""
         if self.fabric is not None:
-            return self.fabric.validate_mode(self.mode)
+            spec = self.fabric
+            if self.scheduler is not None and \
+                    self.scheduler != spec.scheduler:
+                from dataclasses import replace
+                spec = replace(spec, scheduler=self.scheduler)
+            return spec.validate_mode(self.mode)
         return FabricSpec.for_mode(
             self.mode, ocs_latency=self.ocs_latency,
             nic_linkup=self.nic_linkup, n_rails=self.n_rails,
-            technology=self.backend, radix=self.radix)
+            technology=self.backend, radix=self.radix,
+            scheduler=self.scheduler)
 
     @property
     def static_fabric(self) -> bool:
@@ -193,6 +200,9 @@ def simulate(wl: TimedWorkload, params: SimParams, *,
     eng = engine if engine is not None else "event"
     if eng == "analytic":
         assert ocs_fail is None, "fault injection needs the event engine"
+        assert params.fabric_spec().scheduler == "phase_boundary", \
+            "the closed-form model only covers phase-boundary " \
+            "scheduling; per-collective rounds need an event engine"
         return _simulate_analytic(wl, params)
     if eng == "event":
         return VectorEngine(wl, params, ocs_fail=ocs_fail).run()
@@ -223,37 +233,42 @@ def build_plane(job: ph.JobConfig, params: SimParams,
                         collapse=collapse)
 
 
-def _phase_info(wl: TimedWorkload):
+def _phase_info(wl: TimedWorkload, scheduler: str = "phase_boundary",
+                circuit: bool = False):
     """(phase table, uid -> phase-index vector) for a workload — now keyed
     by CONFIG IDENTITY instead of re-hashing the op tuple: ``workload.
     build``/``build_serving`` are lru-cached per (job, gpu), so every
     tenant of a shared shape holds the same TimedWorkload instance and
     this delegates to its per-instance cache (one phase table per config
     across a whole ClusterSim, zero tuple hashing)."""
-    return wl.phase_info()
+    return wl.phase_info(scheduler, circuit=circuit)
 
 
-def _op_meta(wl: TimedWorkload, params: SimParams) -> List[tuple]:
+def _op_meta(wl: TimedWorkload, params: SimParams,
+             scheduler: str = "phase_boundary",
+             circuit: bool = False) -> List[tuple]:
     """Precomputed per-op table for the vectorized engine: one entry per
-    workload op, ``(kind, op, compute_before, dur_healthy, dur_fallback,
-    phase_index)`` with kind 0=mgmt, 1=scale_up, 2=scale_out.
+    SCHEDULED op (DESIGN.md §13), ``(kind, op, compute_before,
+    dur_healthy, dur_fallback, phase_index)`` with kind 0=mgmt,
+    1=scale_up, 2=scale_out.
 
     Durations are evaluated with EXACTLY the expressions the per-op
     collapsed engine uses (same operand order, same literals), so reading
     them back preserves bit-identical floats.  Cached per (workload
-    instance, mode): the tables depend only on the job/gpu shape and the
-    mode's bandwidth split, so a 256-job cluster sharing one config
-    builds them once."""
+    instance, mode, scheduler): the tables depend only on the job/gpu
+    shape, the mode's bandwidth split and the scheduled stream, so a
+    256-job cluster sharing one config builds them once."""
     cache = wl.__dict__.setdefault("_op_meta", {})
-    meta = cache.get(params.mode)
+    key = (params.mode, scheduler, circuit)
+    meta = cache.get(key)
     if meta is not None:
         return meta
     job, gpu = wl.job, wl.gpu
     shares = _static_split(job) if params.mode == "oneshot" else {}
     dilation = _giant_ring_dilation(job)
-    _, phase_of = wl.phase_info()
+    _, phase_of = wl.phase_info(scheduler, circuit=circuit)
     meta = []
-    for op in wl.ops:
+    for op in wl.scheduled_ops(scheduler, circuit=circuit):
         if op.scale == "mgmt":
             dur = MGMT_LAT + op.bytes_per_gpu * 8 / (MGMT_GBPS * 1e9)
             meta.append((0, op, op.compute_before, dur, dur, -1))
@@ -268,7 +283,7 @@ def _op_meta(wl: TimedWorkload, params: SimParams) -> List[tuple]:
                 op, bandwidth_gbps=bw * dilation.get(op.dim, 1.0))
             meta.append((2, op, op.compute_before, dur_h, dur_f,
                          int(phase_of[op.uid])))
-    cache[params.mode] = meta
+    cache[key] = meta
     return meta
 
 
@@ -314,9 +329,26 @@ class EventEngine:
             "warmup + at least one measured iteration"
         self.wl = wl
         self.params = params
+        # the §13 scheduler axis: the stream the plane drives is the
+        # fabric's scheduler applied to the workload's op stream (the
+        # default scheduler on this path returns wl.ops ITSELF unless an
+        # all-to-all needs the circuit execution tax).  With an injected
+        # plane (cluster/fleet mode) the fabric is the plane's — the
+        # tenant's mode is never re-validated against it, exactly as
+        # before the scheduler axis existed.
+        if plane is not None:
+            self.circuit = plane.spec.circuit_switched
+            self.scheduler = params.scheduler \
+                if params.scheduler is not None else "phase_boundary"
+        else:
+            spec = params.fabric_spec()
+            self.circuit = spec.circuit_switched
+            self.scheduler = spec.scheduler
+        self.ops = wl.scheduled_ops(self.scheduler, circuit=self.circuit)
         self.plane = plane if plane is not None else build_plane(
             wl.job, params, ocs_fail, collapse=collapse)
-        self.plane.profile(wl.ops, table=wl.shim_table())
+        self.plane.profile(self.ops, table=wl.shim_table(
+            self.scheduler, circuit=self.circuit))
         self.iterations = iterations
         self.t = start
         self.result: Optional[SimResult] = None
@@ -330,7 +362,7 @@ class EventEngine:
         wl, params, plane = self.wl, self.params, self.plane
         job, gpu = wl.job, wl.gpu
         ctrl_sync, ctrl_async = params.resolved(job.n_gpus)
-        _, phase_of = _phase_info(wl)
+        _, phase_of = _phase_info(wl, self.scheduler, self.circuit)
         dilation = _giant_ring_dilation(job)  # fault fallback bw factors
         # oneshot: the patched-once fabric splits NIC bandwidth statically
         # across the scale-out dims (same sqrt-allocation, and the same
@@ -353,7 +385,7 @@ class EventEngine:
             n_reconfigs = n_writes = 0
             exposed_r = exposed_c = 0.0
             prev_phase = -1
-            for op in wl.ops:
+            for op in self.ops:
                 t += op.compute_before
                 if op.scale == "mgmt":
                     t = _mgmt_op(op, t, t0, timeline)
@@ -504,7 +536,7 @@ class VectorEngine(EventEngine):
         self._started = True
         wl, params, plane = self.wl, self.params, self.plane
         ctrl_sync, ctrl_async = params.resolved(wl.job.n_gpus)
-        meta = _op_meta(wl, params)
+        meta = _op_meta(wl, params, self.scheduler, self.circuit)
         # fast-forward precondition: a fault injector can fire on any
         # future dispatch, so a faultable plane is never fast-forwarded
         ff_ok = plane.ocs_fail is None
@@ -635,7 +667,9 @@ class VectorEngine(EventEngine):
 def _simulate_analytic(wl: TimedWorkload, params: SimParams) -> SimResult:
     job, gpu = wl.job, wl.gpu
     n_ways = job.pp
-    table, phase_of = _phase_info(wl)
+    circuit = params.fabric_spec().circuit_switched
+    ops = wl.scheduled_ops("phase_boundary", circuit=circuit)
+    table, phase_of = _phase_info(wl, "phase_boundary", circuit)
 
     shares = _static_split(job) if params.mode == "oneshot" else {}
     reconf_total = params.ocs_latency + params.nic_linkup
@@ -658,7 +692,7 @@ def _simulate_analytic(wl: TimedWorkload, params: SimParams) -> SimResult:
     prev_phase = -1
     prev_phase_end = 0.0
 
-    for op in wl.ops:
+    for op in ops:
         t += op.compute_before
         if op.scale == "mgmt":
             t = _mgmt_op(op, t, 0.0, timeline)

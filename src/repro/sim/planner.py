@@ -1,10 +1,12 @@
 """Datacenter-scale capacity planner (DESIGN.md §12).
 
 The question every preceding layer exists to answer: *which fabric do I
-buy?*  :func:`plan` sweeps a grid of :class:`~repro.core.fabricspec.
+buy?*  :func:`plan` sweeps a grid of :class:`~repro.core.fabric.
 FabricSpec` cells — switch technology x sub-switch radix x shared ports
-per rail x allocator policy x rail count — and prices every cell three
-ways, all through the REAL control plane:
+per rail x allocator policy x rail count, optionally crossed with OCS
+reconfiguration latency and circuit-scheduling granularity
+(``PlannerConfig.ocs_latencies`` / ``schedulers``, DESIGN.md §13) — and
+prices every cell three ways, all through the REAL control plane:
 
     train    one representative training job on the cell's backend
              (``simulate(engine="event")``): step-time overhead vs the
@@ -46,8 +48,9 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core import phases as ph
-from repro.core.fabricspec import (CROSSBAR_OCS, OCS_ARRAY, PACKET,
+from repro.core.fabric import (CROSSBAR_OCS, OCS_ARRAY, PACKET,
                                    PATCH_PANEL, CrossSubSwitchError)
+from repro.core.scheduler import PHASE_BOUNDARY
 from repro.sim.costmodel import rail_fabric
 from repro.sim.opus_sim import SimParams, simulate
 from repro.sim.workload import GPUS, build
@@ -76,13 +79,18 @@ class PlannerCell:
     n_ports: int
     policy: str
     n_rails: int = 1
+    ocs_latency: float = 0.01
+    scheduler: str = PHASE_BOUNDARY
 
     @property
     def label(self) -> str:
         r = "" if self.radix is None else f"_r{self.radix}"
         rails = "" if self.n_rails == 1 else f"_{self.n_rails}rails"
+        lat = ("" if self.ocs_latency == 0.01
+               else f"_{self.ocs_latency * 1e3:g}ms")
+        sched = "" if self.scheduler == PHASE_BOUNDARY else "_percoll"
         return (f"{self.backend}{r}_{self.n_ports}p_{self.policy}"
-                f"{rails}")
+                f"{rails}{lat}{sched}")
 
 
 @dataclass(frozen=True)
@@ -106,6 +114,13 @@ class PlannerConfig:
     rails: Tuple[int, ...] = (1,)
     gpu: str = "h200"
     ocs_latency: float = 0.01
+    #: OCS reconfiguration latencies to grid over; empty = just
+    #: ``ocs_latency`` (the committed baseline grid)
+    ocs_latencies: Tuple[float, ...] = ()
+    #: circuit-scheduling granularities (DESIGN.md §13); per_collective
+    #: cells are generated for reconfigurable backends only — a static
+    #: fabric has no per-round circuits to schedule
+    schedulers: Tuple[str, ...] = (PHASE_BOUNDARY,)
     #: reference fleet the Fig-14 bill prices each cell at
     bill_gpus: int = 16384
 
@@ -136,11 +151,17 @@ class PlannerConfig:
                             seq_len=4096, n_microbatch=self.train_pp)
 
     def cells(self) -> List[PlannerCell]:
-        return [PlannerCell(backend, radix, n_ports, policy, n_rails)
+        lats = self.ocs_latencies or (self.ocs_latency,)
+        return [PlannerCell(backend, radix, n_ports, policy, n_rails,
+                            lat, sched)
                 for backend, radix in self.backends
                 for n_ports in self.ports_per_rail
                 for policy in self.policies
-                for n_rails in self.rails]
+                for n_rails in self.rails
+                for lat in lats
+                for sched in self.schedulers
+                if sched == PHASE_BOUNDARY
+                or backend in (CROSSBAR_OCS, OCS_ARRAY)]
 
 
 @dataclass
@@ -217,19 +238,24 @@ def _train_point(cell: PlannerCell, cfg: PlannerConfig,
                  cache: Dict[Tuple, object]) -> Dict[str, object]:
     """Step-time overhead of the probe job on this cell's backend.
 
-    Keyed by (backend, radix, n_rails) — the train probe owns its whole
-    fabric, so port space and allocator policy cannot affect it and the
-    grid shares one simulation per distinct hardware shape."""
-    key = (cell.backend, cell.radix, cell.n_rails)
+    Keyed by (backend, radix, n_rails, ocs_latency, scheduler) — the
+    train probe owns its whole fabric, so port space and allocator
+    policy cannot affect it and the grid shares one simulation per
+    distinct hardware shape."""
+    key = (cell.backend, cell.radix, cell.n_rails, cell.ocs_latency,
+           cell.scheduler)
     if key not in cache:
         wl = build(cfg.train_job(), cfg.gpu)
         if "native" not in cache:
             cache["native"] = simulate(wl, SimParams(mode="native"))
         nat = cache["native"].step_time
         mode = TRAIN_MODE[cell.backend]
-        params = SimParams(mode=mode, ocs_latency=cfg.ocs_latency,
+        params = SimParams(mode=mode, ocs_latency=cell.ocs_latency,
                            n_rails=cell.n_rails, backend=cell.backend,
-                           radix=cell.radix)
+                           radix=cell.radix,
+                           scheduler=(cell.scheduler
+                                      if mode in ("opus", "opus_prov")
+                                      else None))
         try:
             r = simulate(wl, params)
         except CrossSubSwitchError as e:
@@ -249,7 +275,7 @@ def _train_point(cell: PlannerCell, cfg: PlannerConfig,
 
 def _bill_point(cell: PlannerCell, cfg: PlannerConfig) -> Dict[str, object]:
     spec = SimParams(mode=TRAIN_MODE[cell.backend],
-                     ocs_latency=cfg.ocs_latency, n_rails=cell.n_rails,
+                     ocs_latency=cell.ocs_latency, n_rails=cell.n_rails,
                      backend=cell.backend, radix=cell.radix).fabric_spec()
     bill = rail_fabric(cfg.bill_gpus, GPUS[cfg.gpu].domain, spec)
     return {
@@ -269,8 +295,9 @@ def _cluster_point(cell: PlannerCell,
                          mean_gap=cfg.cluster_gap, mode=mode)
     res = simulate_cluster(specs, ClusterParams(
         n_ports=cell.n_ports, policy=cell.policy,
-        ocs_latency=cfg.ocs_latency, gpu=cfg.gpu, n_rails=cell.n_rails,
-        backend=cell.backend, radix=cell.radix))
+        ocs_latency=cell.ocs_latency, gpu=cfg.gpu, n_rails=cell.n_rails,
+        backend=cell.backend, radix=cell.radix,
+        scheduler=cell.scheduler))
     s = res.summary()
     return {
         "mode": mode,
@@ -303,9 +330,9 @@ def _serving_point(cell: PlannerCell,
                         mean_prompt_tokens=1024, max_prompt_tokens=2048,
                         seed=5)
     params = FleetParams(n_ports=cell.n_ports, policy=cell.policy,
-                         ocs_latency=cfg.ocs_latency, gpu=cfg.gpu,
+                         ocs_latency=cell.ocs_latency, gpu=cfg.gpu,
                          n_rails=cell.n_rails, backend=cell.backend,
-                         radix=cell.radix)
+                         radix=cell.radix, scheduler=cell.scheduler)
     s = simulate_fleet(params, prefill, decode, trace).summary()
     return {
         "throughput_rps": s["throughput_rps"],
@@ -330,6 +357,12 @@ def plan(cfg: PlannerConfig = PlannerConfig(), *,
             "policy": cell.policy, "n_rails": cell.n_rails,
             "bill": _bill_point(cell, cfg),
         }
+        # non-default grid axes annotate their rows; the committed
+        # baseline grid (one latency, phase_boundary) stays byte-stable
+        if cell.ocs_latency != cfg.ocs_latency:
+            row["ocs_latency"] = cell.ocs_latency
+        if cell.scheduler != PHASE_BOUNDARY:
+            row["scheduler"] = cell.scheduler
         try:
             row["train"] = _train_point(cell, cfg, train_cache)
         except CrossSubSwitchError as e:

@@ -53,7 +53,7 @@ from dataclasses import dataclass, replace
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core import phases as ph
-from repro.core.fabricspec import FabricSpec, OCSArray
+from repro.core.fabric import FabricSpec, OCSArray
 from repro.core.orchestrator import PortAllocator, RailOrchestrator
 from repro.core.plane import ControlPlane
 from repro.sim.opus_sim import SHIM_MODE, SimParams, SimResult, VectorEngine
@@ -110,6 +110,9 @@ class FleetParams:
     gpu: str = "h200"
     backend: str = "crossbar_ocs"   # crossbar_ocs | ocs_array | packet
     radix: Optional[int] = None
+    # circuit-scheduling granularity (DESIGN.md §13) for reconfiguring
+    # replica pools; static (oneshot/packet) pools stay phase_boundary
+    scheduler: str = "phase_boundary"
     # KV handoff
     handoff_interval_s: float = 0.05   # circuit-fabric flush cadence
     relay_bw_factor: float = 0.5       # cross-sub-switch relay penalty
@@ -124,7 +127,10 @@ class FleetParams:
     def fabric_spec(self) -> FabricSpec:
         return FabricSpec(technology=self.backend, n_rails=self.n_rails,
                           reconfig_latency=self.ocs_latency,
-                          nic_linkup=self.nic_linkup, radix=self.radix)
+                          nic_linkup=self.nic_linkup, radix=self.radix,
+                          scheduler=(self.scheduler
+                                     if self.backend != "packet"
+                                     else "phase_boundary"))
 
     def replica_mode(self, pool_mode: str) -> str:
         """Packet rails take STATIC shims (mode ``native``) — there are
@@ -132,10 +138,14 @@ class FleetParams:
         return "native" if self.backend == "packet" else pool_mode
 
     def sim_params(self, pool_mode: str) -> SimParams:
-        return SimParams(mode=self.replica_mode(pool_mode),
+        mode = self.replica_mode(pool_mode)
+        return SimParams(mode=mode,
                          ocs_latency=self.ocs_latency,
                          nic_linkup=self.nic_linkup, n_rails=self.n_rails,
-                         backend=self.backend, radix=self.radix)
+                         backend=self.backend, radix=self.radix,
+                         scheduler=(self.scheduler
+                                    if mode in ("opus", "opus_prov")
+                                    else None))
 
 
 @dataclass

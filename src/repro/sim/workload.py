@@ -87,25 +87,71 @@ class TimedWorkload:
     # dataclass is frozen but not slotted, so lazily stashing in __dict__
     # (cached_property style) is safe and costs one dict probe thereafter.
 
-    def phase_info(self):
-        """(phase table, uid -> phase-index numpy vector) of ``ops``."""
+    def scheduled_ops(self, scheduler: str = "phase_boundary", *,
+                      circuit: bool = False) -> List[CommOp]:
+        """The op stream the control plane actually drives: ``ops``
+        rewritten by the named :mod:`repro.core.scheduler` for this
+        fabric (DESIGN.md §13).  The default scheduler on a non-circuit
+        fabric returns ``self.ops`` ITSELF (bit-identity by construction);
+        rewritten streams are cached per (scheduler, circuit) so every
+        engine and every tenant of a shared workload sees one list."""
+        from repro.core.scheduler import get_scheduler
+        key = (scheduler, circuit)
+        cache = self.__dict__.setdefault("_sched_ops", {})
         try:
-            return self.__dict__["_phase_info"]
+            return cache[key]
         except KeyError:
-            table = build_phase_table(self.ops)
-            info = (table, phase_index_of(self.ops, table))
-            self.__dict__["_phase_info"] = info
+            ops = get_scheduler(scheduler).schedule(self.ops, self.job,
+                                                    circuit=circuit)
+            cache[key] = ops
+            return ops
+
+    def phase_info(self, scheduler: str = "phase_boundary", *,
+                   circuit: bool = False):
+        """(phase table, uid -> phase-index numpy vector) of the
+        scheduled op stream."""
+        ops = self.scheduled_ops(scheduler, circuit=circuit)
+        if ops is self.ops:
+            # unrewritten stream: keep the single legacy slot so no-arg
+            # callers (and every default path) share one table
+            try:
+                return self.__dict__["_phase_info"]
+            except KeyError:
+                table = build_phase_table(self.ops)
+                info = (table, phase_index_of(self.ops, table))
+                self.__dict__["_phase_info"] = info
+                return info
+        cache = self.__dict__.setdefault("_phase_info_by_sched", {})
+        key = (scheduler, circuit)
+        try:
+            return cache[key]
+        except KeyError:
+            table = build_phase_table(ops)
+            info = (table, phase_index_of(ops, table))
+            cache[key] = info
             return info
 
-    def shim_table(self):
-        """Shim-format phase table (core.shim.table_from_ops), shared so a
-        ControlPlane profiling this workload skips the rebuild."""
+    def shim_table(self, scheduler: str = "phase_boundary", *,
+                   circuit: bool = False):
+        """Shim-format phase table (core.shim.table_from_ops) of the
+        scheduled op stream, shared so a ControlPlane profiling this
+        workload skips the rebuild."""
+        from repro.core.shim import table_from_ops
+        ops = self.scheduled_ops(scheduler, circuit=circuit)
+        if ops is self.ops:
+            try:
+                return self.__dict__["_shim_table"]
+            except KeyError:
+                table = table_from_ops(self.ops)
+                self.__dict__["_shim_table"] = table
+                return table
+        cache = self.__dict__.setdefault("_shim_table_by_sched", {})
+        key = (scheduler, circuit)
         try:
-            return self.__dict__["_shim_table"]
+            return cache[key]
         except KeyError:
-            from repro.core.shim import table_from_ops
-            table = table_from_ops(self.ops)
-            self.__dict__["_shim_table"] = table
+            table = table_from_ops(ops)
+            cache[key] = table
             return table
 
 

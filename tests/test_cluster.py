@@ -8,7 +8,8 @@ import time
 import pytest
 
 from repro.configs.base import get_config
-from repro.core.orchestrator import (OCSDriver, PortAllocator,
+from repro.core.fabric import CrossbarOCS
+from repro.core.orchestrator import (PortAllocator,
                                      RailOrchestrator)
 from repro.core.phases import JobConfig
 from repro.core.plane import ControlPlane, build_placement
@@ -94,7 +95,7 @@ def test_allocator_double_grant_rejected():
 
 
 def test_register_rejects_port_overlap():
-    orch = RailOrchestrator(0, OCSDriver(n_ports=32))
+    orch = RailOrchestrator(0, CrossbarOCS(n_ports=32))
     orch.register_job(build_placement(SMALL, "a"), TopoId.uniform(2, 1))
     clash = build_placement(SMALL, "b")        # identity ports again
     with pytest.raises(AssertionError):
@@ -104,7 +105,7 @@ def test_register_rejects_port_overlap():
 def test_apply_rejects_foreign_ports():
     """A job whose placement names ports it does not own is stopped at
     dispatch, before any OCS programming."""
-    orch = RailOrchestrator(0, OCSDriver(n_ports=32))
+    orch = RailOrchestrator(0, CrossbarOCS(n_ports=32))
     pl_a = build_placement(SMALL, "a")
     orch.register_job(pl_a, TopoId.uniform(2, 1))
     # adversarial: swap job b's state to point at a's ports post-register
@@ -124,7 +125,7 @@ def test_apply_rejects_foreign_ports():
 
 def _shared_two_planes(ocs_fail_b=None):
     """Two jobs on one shared rail, planes driven by hand."""
-    rail = RailOrchestrator(0, OCSDriver(n_ports=32,
+    rail = RailOrchestrator(0, CrossbarOCS(n_ports=32,
                                          reconfig_latency=0.01))
     plane_a = ControlPlane(SMALL, mode=PROVISIONING, job_id="a",
                            collapse=True, orchestrators=[rail],

@@ -8,7 +8,7 @@ import math
 import pytest
 
 from repro.configs.base import get_config
-from repro.core.fabricspec import (CrossbarOCS, CrossSubSwitchError,
+from repro.core.fabric import (CrossbarOCS, CrossSubSwitchError,
                                    FabricSpec, OCSArray, PacketSwitch,
                                    PatchPanel, StaticFabricError)
 from repro.core.orchestrator import RailOrchestrator

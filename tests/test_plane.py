@@ -3,7 +3,8 @@ end-to-end §4.2 fault path, and the orchestrator accounting fixes."""
 import pytest
 
 from repro.configs.base import get_config
-from repro.core.orchestrator import OCSDriver, RailOrchestrator
+from repro.core.fabric import CrossbarOCS
+from repro.core.orchestrator import RailOrchestrator
 from repro.core.phases import JobConfig, iteration_schedule
 from repro.core.plane import ControlPlane, build_placement
 from repro.core.shim import DEFAULT, PROVISIONING
@@ -52,7 +53,7 @@ def test_default_engine_is_event_and_drives_real_machinery():
     t = r.telemetry
     assert t is not None
     assert t["n_barriers"] > 0            # Controller.n_barriers
-    assert t["n_program_calls"] > 0       # OCSDriver.n_program_calls
+    assert t["n_program_calls"] > 0       # CrossbarOCS.n_program_calls
     assert t["n_topo_writes"] > 0         # Shim counters
     assert t["n_reconfig_events"] > 0     # RailOrchestrator counters
     assert not t["fallback_giant_ring"]
@@ -273,7 +274,7 @@ def _overlap_placement():
 
 
 def test_apply_dedupes_disconnect_and_connect():
-    ocs = OCSDriver(n_ports=8)
+    ocs = CrossbarOCS(n_ports=8)
     orch = RailOrchestrator(0, ocs)
     orch.register_job(_overlap_placement(), TopoId((2,)))
     before = ocs.n_ports_programmed
@@ -288,7 +289,7 @@ def test_apply_asserts_on_inconsistent_duplicate_srcs():
     ports = ((0, 1, 2, 3),)
     pl = JobPlacement("j", ports, {1: {0: [(0, 1, 2, 3), (0, 2, 1, 3)]},
                                    2: {0: [ports[0]]}})
-    ocs = OCSDriver(n_ports=8)
+    ocs = CrossbarOCS(n_ports=8)
     orch = RailOrchestrator(0, ocs)
     orch.register_job(pl, TopoId((2,)))
     with pytest.raises(AssertionError):

@@ -6,7 +6,8 @@ import pytest
 
 from repro.configs.base import get_config
 from repro.core.controller import Controller, GroupState
-from repro.core.orchestrator import OCSDriver, RailOrchestrator
+from repro.core.fabric import CrossbarOCS
+from repro.core.orchestrator import RailOrchestrator
 from repro.core.phases import (JobConfig, build_phase_table,
                                iteration_schedule, phase_index_of)
 from repro.core.plane import ControlPlane
@@ -163,7 +164,7 @@ def test_per_rank_api_rejected_on_collapsed_plane():
 
 
 def _rig(n_ways=2, per_way=4):
-    ocs = OCSDriver(n_ports=64, reconfig_latency=0.01)
+    ocs = CrossbarOCS(n_ports=64, reconfig_latency=0.01)
     orch = RailOrchestrator(0, ocs)
     ports = tuple(tuple(range(w * per_way, (w + 1) * per_way))
                   for w in range(n_ways))

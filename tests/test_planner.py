@@ -7,7 +7,7 @@ import math
 import numpy as np
 import pytest
 
-from repro.core.fabricspec import (CROSSBAR_OCS, OCS_ARRAY, PACKET,
+from repro.core.fabric import (CROSSBAR_OCS, OCS_ARRAY, PACKET,
                                    PATCH_PANEL)
 from repro.sim.planner import (OBJECTIVES, PlannerCell, PlannerConfig,
                                pareto_mask, plan, single_job_100k)

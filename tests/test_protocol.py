@@ -3,7 +3,8 @@ import pytest
 
 from repro.configs.base import get_config
 from repro.core.controller import Controller, GroupState
-from repro.core.orchestrator import OCSDriver, RailOrchestrator
+from repro.core.fabric import CrossbarOCS
+from repro.core.orchestrator import RailOrchestrator
 from repro.core.phases import JobConfig, iteration_schedule
 from repro.core.shim import DEFAULT, PROVISIONING, Shim
 from repro.core.topo import JobPlacement, TopoId
@@ -12,7 +13,7 @@ from repro.core.topo import JobPlacement, TopoId
 def _rig(n_ways=2, per_way=4, n_rails=2):
     orchs = []
     for r in range(n_rails):
-        ocs = OCSDriver(n_ports=64, reconfig_latency=0.01)
+        ocs = CrossbarOCS(n_ports=64, reconfig_latency=0.01)
         orch = RailOrchestrator(r, ocs)
         ports = tuple(tuple(range(w * per_way, (w + 1) * per_way))
                       for w in range(n_ways))

@@ -2,7 +2,8 @@
 (paper §4.1, Fig 8) — including hypothesis property tests."""
 from hypothesis import given, settings, strategies as st
 
-from repro.core.orchestrator import OCSDriver, RailOrchestrator
+from repro.core.fabric import CrossbarOCS
+from repro.core.orchestrator import RailOrchestrator
 from repro.core.topo import (JobPlacement, TopoId, affected_ways,
                              build_submapping, diff_digits, full_mapping,
                              naive_storage, opus_storage, ports_per_event,
@@ -64,7 +65,7 @@ def test_storage_decomposition_counts():
 
 
 def test_orchestrator_reprograms_only_affected_ports():
-    ocs = OCSDriver(n_ports=64)
+    ocs = CrossbarOCS(n_ports=64)
     orch = RailOrchestrator(0, ocs)
     pl = _placement()
     orch.register_job(pl, TopoId((1, 1)))
@@ -79,7 +80,7 @@ def test_orchestrator_reprograms_only_affected_ports():
 
 def test_orchestrator_noop_topo_write_programs_nothing():
     """O1: identical digits -> no OCS programming (suppression)."""
-    ocs = OCSDriver(n_ports=64)
+    ocs = CrossbarOCS(n_ports=64)
     orch = RailOrchestrator(0, ocs)
     orch.register_job(_placement(), TopoId((1, 1)))
     n = ocs.n_program_calls
@@ -90,7 +91,7 @@ def test_orchestrator_noop_topo_write_programs_nothing():
 
 def test_multi_job_isolation():
     """Reconfiguring one job's circuits never disturbs another's (§7)."""
-    ocs = OCSDriver(n_ports=64)
+    ocs = CrossbarOCS(n_ports=64)
     orch = RailOrchestrator(0, ocs)
     pl_a = _placement()
     ports_b = ((8, 9, 10, 11), (12, 13, 14, 15))
