@@ -209,6 +209,39 @@ def summary_markdown(records: Dict[str, dict]) -> str:
                              f"{wk['makespan_days']:.1f} simulated days, "
                              f"{wk['n_reconfig_events']} reconfig events")
             lines.append(f"\nwall: {rec['wall_s']}s")
+        elif "ops" in rec:
+            o = rec["ops"]
+            surv, reco = o["flap_survival"], o["flap_recovery"]
+            lines.append("| scenario | retries | survived | demotions | "
+                         "recoveries | fast-forwarded |")
+            lines.append("|---|---:|---:|---:|---:|---:|")
+            lines.append(f"| flap in budget | {surv['n_retries']} "
+                         f"| {surv['n_flaps_survived']} "
+                         f"| {surv['n_demotions']} "
+                         f"| {surv['n_recoveries']} | — |")
+            lines.append(f"| flap past budget | {reco['n_retries']} "
+                         f"| {reco['n_flaps_survived']} "
+                         f"| {reco['n_demotions']} "
+                         f"| {reco['n_recoveries']} "
+                         f"| {reco['fastforwarded_iterations']} |")
+            lines.append("")
+            for how, d in o["drains"].items():
+                lines.append(f"- drain ({how}): {d['n_restarted']} "
+                             f"restarted, {d['n_migrated']} migrated, "
+                             f"{d['n_done']} done, makespan "
+                             f"{d['makespan']:.2f}s")
+            df = o["defrag"]
+            lines.append(f"- defrag: **{df['n_moves']} moves** cut the "
+                         f"blocked job's queueing delay "
+                         f"{df['big_delay_off_s']:.2f}s → "
+                         f"{df['big_delay_on_s']:.2f}s "
+                         f"(Δ {df['delay_improvement_s']:.2f}s)")
+            tw = o["twin"]
+            lines.append(f"- twin diff: {tw['rows_base']} vs "
+                         f"{tw['rows_drain']} rows, "
+                         f"{tw['differing_rows']} differ "
+                         f"({tw['diff_cells']} cells)")
+            lines.append(f"\nwall: {rec['wall_s']}s")
         elif "points" in rec:
             lines.append("| point | GPUs | peak util | frag (peak) | "
                          "mean overhead | max queue delay | OCS queued |")

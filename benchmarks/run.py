@@ -29,9 +29,15 @@ week-long cluster trace, each in seconds) and writes
 ``BENCH_opus_planner.json``; ``--scheduler-ab`` runs the DESIGN.md §13
 A/B — phase_boundary vs per_collective circuit scheduling on EP-heavy
 MoE configs across OCS latencies — and writes ``BENCH_opus_sched.json``.
+``--ops`` runs the DESIGN.md §14 operations scenario suite — a flap
+storm absorbed by the retry budget, a budget-exhausting flap that
+demotes and then repairs (fast-forward re-armed), maintenance drains
+re-placing tenants by checkpoint-restart and by live migration, a
+defrag policy acting on fragmentation telemetry, and a digital-twin
+diff — and writes ``BENCH_opus_ops.json``.
 ``--profile`` wraps whichever mode ran in cProfile and prints the
 top-20 cumulative hotspots.
-CI runs all six after the smoke subset and gates them against
+CI runs all seven after the smoke subset and gates them against
 benchmarks/baselines/ via benchmarks/check_perf.py (wall-clock ratio +
 exact counter match).
 """
@@ -456,6 +462,119 @@ def planner_report(out_path: str = "BENCH_opus_planner.json") -> dict:
     return rec
 
 
+def ops_report(out_path: str = "BENCH_opus_ops.json") -> dict:
+    """Operations scenario suite (DESIGN.md §14): a flap storm absorbed
+    by the retry budget, a budget-exhausting flap that demotes and then
+    REPAIRS (topology restored, fast-forward re-armed), a maintenance
+    drain re-placing tenants both ways (checkpoint-restart and live
+    migration), a defrag policy acting on fragmentation telemetry, and
+    the digital-twin diff between a drained and an undisturbed fleet.
+    Every number is deterministic: flap schedules come from the fixed
+    LCG, drains are declared windows."""
+    from repro.configs.base import get_config
+    from repro.core import phases as ph
+    from repro.core.faults import FaultModel, LinkFlap
+    from repro.sim.cluster import ClusterJobSpec, ClusterParams
+    from repro.sim.ops import (DefragPolicy, DrainWindow, ScenarioEngine,
+                               diff_twin, run_scenario)
+    from repro.sim.opus_sim import SimParams, VectorEngine
+    from repro.sim.workload import build
+
+    t_all = time.perf_counter()
+    cfg = get_config("llama3_8b")
+    small = ph.JobConfig(model=cfg.replace(n_layers=4), tp=2, fsdp=4, pp=2,
+                         global_batch=32, seq_len=2048)
+    tiny = ph.JobConfig(model=cfg.replace(n_layers=2), tp=2, fsdp=2, pp=1,
+                        global_batch=16, seq_len=2048)
+    wl = build(small, "h200")
+    sp = SimParams(mode="opus_prov", ocs_latency=0.01)
+    print("== ops scenarios: flaps, drains, defrag, twin ==")
+
+    # -- flap inside the retry budget: survives, no demotion
+    fm = FaultModel(flaps=(LinkFlap(rail=-1, start=2.0, duration=0.4),))
+    eng = VectorEngine(wl, sp, ocs_fail=fm, iterations=8)
+    eng.run()
+    survival = dict(eng.plane.fault_stats())
+    print(f"  flap 0.4s: {survival['n_retries']} retries, "
+          f"{survival['n_flaps_survived']} survived, "
+          f"{survival['n_demotions']} demotions")
+
+    # -- flap past the budget: demote -> repair -> fast-forward re-arms
+    fm = FaultModel(flaps=(LinkFlap(rail=-1, start=2.0, duration=5.0),))
+    eng = VectorEngine(wl, sp, ocs_fail=fm, iterations=30)
+    eng.run()
+    recovery = dict(eng.plane.fault_stats())
+    recovery["fastforwarded_iterations"] = eng.fastforwarded_iterations
+    print(f"  flap 5s: {recovery['n_demotions']} demotion, "
+          f"{recovery['n_recoveries']} recovery, "
+          f"{recovery['fastforwarded_iterations']} iterations "
+          f"fast-forwarded after repair")
+
+    # -- maintenance drain, both eviction paths, plus the twin diff
+    specs = [ClusterJobSpec(f"job{i}", small, arrival=0.5 * i, iterations=6)
+             for i in range(3)]
+    cp = ClusterParams(n_ports=32, ocs_latency=0.01)
+    base_res, base_sim = run_scenario(specs, cp, twin=True)
+    drains = {}
+    twin = None
+    for how, migrate in (("restart", False), ("migrate", True)):
+        ops = ScenarioEngine(drains=(DrainWindow(
+            start=1.0, duration=3.0, ports=(0, 16), migrate=migrate),))
+        res, sim = run_scenario(specs, cp, ops=ops, twin=not migrate)
+        s = res.summary()
+        drains[how] = {
+            "n_restarted": ops.stats["n_restarted"],
+            "n_migrated": ops.stats["n_migrated"],
+            "n_done": s["n_done"],
+            "mean_queueing_delay": round(s["mean_queueing_delay"], 6),
+            "makespan": round(s["makespan"], 6),
+        }
+        print(f"  drain ({how}): {ops.stats['n_restarted']} restarted, "
+              f"{ops.stats['n_migrated']} migrated, "
+              f"{s['n_done']} done")
+        if not migrate:
+            d = diff_twin(base_sim.twin(), sim.twin())
+            twin = {"rows_base": d.n_rows_a, "rows_drain": d.n_rows_b,
+                    "differing_rows": d.n_differing_rows,
+                    "diff_cells": d.n_diffs}
+            print(f"  twin diff: {d.n_rows_a} vs {d.n_rows_b} rows, "
+                  f"{d.n_differing_rows} differ ({d.n_diffs} cells)")
+
+    # -- defrag: long tenants pin scattered holes; compaction unblocks
+    # the fragmentation-stuck big job
+    dspecs = []
+    for i in range(8):
+        long = i % 2 == 0
+        dspecs.append(ClusterJobSpec(
+            f"t{i}_{'long' if long else 'short'}", tiny, arrival=0.0,
+            iterations=40 if long else 2))
+    dspecs.append(ClusterJobSpec("big", small, arrival=1.0, iterations=4))
+    dp = ClusterParams(n_ports=16, ocs_latency=0.01)
+    off, _ = run_scenario(dspecs, dp)
+    ops = ScenarioEngine(defrag=DefragPolicy(threshold=0.2, max_moves=4))
+    on, _ = run_scenario(dspecs, dp, ops=ops)
+    big_off = next(r for r in off.jobs if r.spec.name == "big")
+    big_on = next(r for r in on.jobs if r.spec.name == "big")
+    defrag = {
+        "n_moves": ops.stats["n_defrag_moves"],
+        "n_checks": ops.stats["n_defrag_checks"],
+        "big_delay_off_s": round(big_off.queueing_delay, 6),
+        "big_delay_on_s": round(big_on.queueing_delay, 6),
+        "delay_improvement_s": round(
+            big_off.queueing_delay - big_on.queueing_delay, 6),
+    }
+    print(f"  defrag: {defrag['n_moves']} moves, big-job queueing "
+          f"{defrag['big_delay_off_s']}s -> {defrag['big_delay_on_s']}s")
+
+    wall = time.perf_counter() - t_all
+    rec = {"bench": "opus_ops_scenarios", "wall_s": round(wall, 4),
+           "ops": {"flap_survival": survival, "flap_recovery": recovery,
+                   "drains": drains, "defrag": defrag, "twin": twin}}
+    Path(out_path).write_text(json.dumps(rec, indent=2) + "\n")
+    print(f"  wall={wall:.3f}s  -> {out_path}")
+    return rec
+
+
 def _profiled(fn):
     """Run ``fn`` under cProfile; print the top-20 cumulative hotspots
     (and append them to $GITHUB_STEP_SUMMARY when set)."""
@@ -508,6 +627,11 @@ def main():
                     help="write BENCH_opus_sched.json (phase_boundary vs "
                          "per_collective on EP-heavy MoE configs across "
                          "OCS latencies, DESIGN.md §13) and exit")
+    ap.add_argument("--ops", action="store_true",
+                    help="write BENCH_opus_ops.json (operations "
+                         "scenarios, DESIGN.md §14: flap storm + "
+                         "recovery, maintenance drains, defrag, twin "
+                         "diff) and exit")
     ap.add_argument("--scheduler", default="phase_boundary",
                     choices=["phase_boundary", "per_collective"],
                     help="circuit-scheduling granularity for --perf "
@@ -535,6 +659,9 @@ def main():
         return 0
     if args.planner:
         run(planner_report)
+        return 0
+    if args.ops:
+        run(ops_report)
         return 0
 
     def paper_suite():

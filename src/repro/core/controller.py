@@ -13,6 +13,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.core.faults import FaultModel
 from repro.core.orchestrator import RailOrchestrator
 from repro.core.topo import PP_DIGIT, TopoId
 
@@ -62,6 +63,19 @@ class Controller:
         self.n_dispatches = 0
         self.fallback_giant_ring = False
         self.failure_log: List[str] = []
+        # the topology a healthy run WOULD be on, accumulated while the
+        # job rides the giant ring: every suppressed barrier folds its
+        # requested way/digit update in here, so recover() restores
+        # exactly what the next healthy barrier diffs against and the
+        # post-repair dispatch sequence matches a never-faulted run's
+        self.pending_topo: Dict[int, TopoId] = {}
+        # degrade-and-recover counters (DESIGN.md §14); surfaced via
+        # ControlPlane.fault_stats(), NOT telemetry() — the committed
+        # BENCH records' integer-key structure stays frozen
+        self.n_retries = 0
+        self.n_flaps_survived = 0
+        self.n_demotions = 0
+        self.n_recoveries = 0
 
     # -- CTR table ----------------------------------------------------------
     def register_group(self, gs: GroupState):
@@ -128,6 +142,9 @@ class Controller:
             # §4.2: after the persistent-failure fallback the job runs on
             # the static giant ring — barriers still synchronize the ranks
             # but no further reconfiguration is dispatched (no-op writes).
+            # The requested topology is still tracked so a later repair
+            # can restore what the healthy run would be on.
+            self._note_pending(g, ways, variant)
             acked = tuple(g.waiting)
             g.idx += 1
             g.ready = 0
@@ -169,16 +186,32 @@ class Controller:
             for o, prev in handled:
                 self.topo[o.rail_id] = prev
                 ack = max(ack, o.apply_giant_ring(self.job_id, now))
+            # after the revert every rail's topo record is its pre-barrier
+            # state, so the pending update folds the DEMOTING barrier's
+            # request in too (the repair must land on it)
+            self._note_pending(g, ways, variant)
         acked = tuple(g.waiting)
         g.idx += 1
         g.ready = 0
         g.waiting = []
         return WriteResult(True, ack, reconfigured, acked)
 
+    def _note_pending(self, g: GroupState, ways, variant: int) -> None:
+        """Fold a fallback-suppressed barrier's requested update into the
+        pending (would-be-healthy) topology record per rail."""
+        v = 0 if g.digit == PP_DIGIT else variant
+        for rail in g.rails:
+            if rail not in self.topo:
+                continue
+            base = self.pending_topo.get(rail, self.topo[rail])
+            self.pending_topo[rail] = base.with_ways(ways, g.digit, v)
+
     def _dispatch(self, o: RailOrchestrator, topo: TopoId, now: float,
                   ocs_fail) -> float:
         """Forward with timeout/retry; persistent failure -> giant ring."""
         self.n_dispatches += 1
+        if isinstance(ocs_fail, FaultModel):
+            return self._dispatch_flaps(o, topo, now, ocs_fail)
         for attempt in range(self.max_retries):
             if ocs_fail is not None and ocs_fail(attempt):
                 self.failure_log.append(
@@ -190,6 +223,57 @@ class Controller:
         # orchestrator, so the §9 port-ownership invariant and per-job
         # accounting hold on the fault path too
         self.fallback_giant_ring = True
+        self.n_demotions += 1
         self.failure_log.append(
             f"rail {o.rail_id}: persistent failure -> giant ring fallback")
         return o.apply_giant_ring(self.job_id, now)
+
+    def _dispatch_flaps(self, o: RailOrchestrator, topo: TopoId,
+                        now: float, fm: FaultModel) -> float:
+        """Wall-clock retry loop against a FaultModel's outage windows:
+        each failed attempt waits ``timeout * backoff**attempt``, so a
+        short flap is WAITED OUT within the budget instead of demoting.
+        With ``backoff=1.0`` and the default budget this is timestamp-
+        identical to the legacy attempt loop."""
+        budget = fm.retry_budget if fm.retry_budget is not None \
+            else self.max_retries
+        for attempt in range(budget):
+            if fm.down(o.rail_id, now):
+                self.n_retries += 1
+                self.failure_log.append(
+                    f"rail {o.rail_id} attempt {attempt}: timeout")
+                now += self.timeout * fm.backoff ** attempt
+                continue
+            if attempt:
+                self.n_flaps_survived += 1
+            return o.apply(self.job_id, topo, now)
+        self.fallback_giant_ring = True
+        self.n_demotions += 1
+        self.failure_log.append(
+            f"rail {o.rail_id}: persistent failure -> giant ring fallback")
+        return o.apply_giant_ring(self.job_id, now)
+
+    # -- repair (DESIGN.md §14: the degrade-and-recover state machine) ------
+    def recover(self, now: float = 0.0) -> float:
+        """Restore the topology the job would be on had the fault never
+        happened, clearing the giant-ring demotion.
+
+        The giant ring superseded EVERY rail's circuits without touching
+        the recorded topo/sub-mappings, so each rail gets a FULL re-wire
+        (``RailOrchestrator.repair``) to its pending target — a digit-diff
+        ``apply`` would under-program ways the suppressed barriers never
+        named.  After this the replay cache re-promotes (``replay_ready``
+        keys off the fallback flag) and the vector engine's fast-forward
+        re-arms."""
+        assert self.fallback_giant_ring, "recover() outside fallback"
+        ack = now
+        for o in self.orchestrators:
+            target = self.pending_topo.get(o.rail_id, self.topo[o.rail_id])
+            ack = max(ack, o.repair(self.job_id, target, now))
+            self.topo[o.rail_id] = target
+        self.pending_topo.clear()
+        self.fallback_giant_ring = False
+        self.n_recoveries += 1
+        self.failure_log.append(
+            f"rail repair at t={now:.6g}: requested topology restored")
+        return ack

@@ -141,6 +141,12 @@ class SwitchBackend:
     def connected(self, a: int) -> Optional[int]:
         return self.circuits.get(a)
 
+    def circuit_snapshot(self) -> List[Tuple[int, int]]:
+        """The live circuit table as sorted (src, dst) pairs — the
+        digital-twin inventory unit (DESIGN.md §14).  A circuit-free
+        fabric (PacketSwitch) reports an empty table."""
+        return sorted(self.circuits.items())
+
 
 class CrossbarOCS(SwitchBackend):
     """One non-blocking crossbar per rail — the paper's OCS and the

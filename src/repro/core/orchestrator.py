@@ -21,6 +21,7 @@ from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Tuple
 
 from repro.core.fabric import SwitchBackend
+from repro.core.faults import MigrationContractError, PortOwnershipError
 from repro.core.topo import (JobPlacement, SubMapping, TopoId, affected_ways,
                              build_submapping, ring_pairs)
 
@@ -78,12 +79,17 @@ class RailOrchestrator:
     # -- the §9 isolation invariant -----------------------------------------
     def _assert_owned(self, job_id: str, ports: Iterable[int]) -> None:
         """No program on behalf of ``job_id`` may ever name a port that
-        belongs to another tenant — asserted on EVERY dispatch path
-        (reconfigs, registration, deregistration, giant-ring fallback)."""
+        belongs to another tenant — checked on EVERY dispatch path
+        (reconfigs, registration, deregistration, giant-ring fallback).
+        Raises :class:`PortOwnershipError` (an :class:`AssertionError`
+        subclass, so it survives ``python -O`` and scenario code can
+        catch-and-degrade on the precise type)."""
         foreign = sorted(p for p in ports
                          if self.port_owner.get(p) != job_id)
-        assert not foreign, \
-            f"job {job_id!r} would program foreign/unowned ports {foreign}"
+        if foreign:
+            raise PortOwnershipError(
+                f"job {job_id!r} would program foreign/unowned ports "
+                f"{foreign}")
 
     def _programmed(self, st: JobTopoState, n_ports: int) -> None:
         st.n_program_calls += 1
@@ -94,8 +100,10 @@ class RailOrchestrator:
                      now: float = 0.0) -> float:
         taken = sorted(p for p in placement.all_ports
                        if p in self.port_owner)
-        assert not taken, \
-            f"job {placement.job_id!r} claims already-owned ports {taken}"
+        if taken:
+            raise PortOwnershipError(
+                f"job {placement.job_id!r} claims already-owned ports "
+                f"{taken}")
         st = JobTopoState(placement, initial)
         for w in range(initial.n_ways):
             st.submaps[w] = build_submapping(placement, initial, w)
@@ -189,6 +197,80 @@ class RailOrchestrator:
         # another tenant's busy clock into this job's ack time
         return self.ocs.program(ports, pairs, now)
 
+    def repair(self, job_id: str, new_topo: TopoId,
+               now: float = 0.0) -> float:
+        """Full re-wire to ``new_topo`` after a fault repair (DESIGN.md
+        §14).  The giant-ring fallback superseded the job's circuits
+        WITHOUT updating its topo/sub-mapping records, so the digit-diff
+        of :meth:`apply` would under-program: every way is rebuilt and
+        every connected job port re-wired in one program, landing the
+        rail exactly where a never-faulted run would be."""
+        st = self.jobs[job_id]
+        assert self.ocs.programmable, "repair on a circuit-free fabric"
+        ports = sorted(st.placement.all_ports)
+        self._assert_owned(job_id, ports)
+        dst_of: Dict[int, int] = {}
+        conn: List[Tuple[int, int]] = []
+        for w in range(new_topo.n_ways):
+            sm = build_submapping(st.placement, new_topo, w)
+            st.submaps[w] = sm
+            for a, b in sm.pairs:
+                if a in dst_of:
+                    assert dst_of[a] == b, \
+                        f"way overlap wires port {a} to both {dst_of[a]} " \
+                        f"and {b}"
+                    continue
+                dst_of[a] = b
+                conn.append((a, b))
+        st.topo = new_topo
+        disco = [p for p in ports if self.ocs.connected(p) is not None]
+        self.n_reconfig_events += 1
+        st.n_reconfig_events += 1
+        self._programmed(st, len(disco) + len(conn))
+        return self.ocs.program(disco, conn, now)
+
+    def evacuate(self, job_id: str, dst_ports: Tuple[int, ...],
+                 now: float = 0.0) -> "MigrationTicket":
+        """Live-migration copy circuits: wire ``job_id``'s current ports
+        point-to-point onto FREE destination ports (a maintenance drain
+        or defrag move streaming state to its new home, DESIGN.md §14).
+
+        The destinations must be unowned — this is the one sanctioned
+        program naming ports outside the tenant's grant, and it still
+        never touches another tenant's.  Circuits are keyed by the OLD
+        (source) ports, so the job's subsequent ``release`` tears them
+        down; on an :class:`~repro.core.fabric.OCSArray`, pairs spanning
+        sub-switches are relayed, and a circuit-free fabric relays
+        everything (no program, ``done == now``)."""
+        st = self.jobs[job_id]
+        src_ports = tuple(sorted(st.placement.all_ports))
+        self._assert_owned(job_id, src_ports)
+        owned = sorted(p for p in dst_ports if p in self.port_owner)
+        if owned:
+            raise PortOwnershipError(
+                f"evacuation of {job_id!r} targets owned ports {owned}")
+        if len(dst_ports) != len(src_ports):
+            raise MigrationContractError(
+                f"evacuation of {job_id!r} pairs {len(src_ports)} source "
+                f"ports with {len(dst_ports)} destination ports")
+        pairs = list(zip(src_ports, dst_ports))
+        if not pairs:
+            return MigrationTicket(now, 0, 0)
+        if not self.ocs.programmable:
+            return MigrationTicket(now, 0, len(pairs))
+        sub = getattr(self.ocs, "sub_switch", None)
+        wired = [p for p in pairs if sub is None or sub(p[0]) == sub(p[1])]
+        relayed = len(pairs) - len(wired)
+        if not wired:
+            return MigrationTicket(now, 0, relayed)
+        disco = sorted({a for a, _ in wired
+                        if self.ocs.connected(a) is not None})
+        self.n_reconfig_events += 1
+        st.n_reconfig_events += 1
+        self._programmed(st, len(disco) + len(wired))
+        done = self.ocs.program(disco, wired, now)
+        return MigrationTicket(done, len(wired), relayed)
+
     # -- cross-tenant KV migration (DESIGN.md §11) ---------------------------
     def migrate(self, handoffs: List[Tuple[str, str, Tuple[int, ...],
                                            Tuple[int, ...]]],
@@ -215,19 +297,24 @@ class RailOrchestrator:
         for src_job, dst_job, src_ports, dst_ports in handoffs:
             self._assert_owned(src_job, src_ports)
             self._assert_owned(dst_job, dst_ports)
-            assert src_job != dst_job, \
-                f"self-migration for {src_job!r} never touches the rails"
-            assert len(src_ports) == len(dst_ports), \
-                f"handoff {src_job!r}->{dst_job!r} pairs " \
-                f"{len(src_ports)} source ports with {len(dst_ports)} " \
-                f"destination ports (trim to rank pairs at the call site)"
+            if src_job == dst_job:
+                raise MigrationContractError(
+                    f"self-migration for {src_job!r} never touches the "
+                    f"rails")
+            if len(src_ports) != len(dst_ports):
+                raise MigrationContractError(
+                    f"handoff {src_job!r}->{dst_job!r} pairs "
+                    f"{len(src_ports)} source ports with {len(dst_ports)} "
+                    f"destination ports (trim to rank pairs at the call "
+                    f"site)")
             # a port holds one circuit: the same source port named by two
             # handoff entries of one program is a caller bug that would
             # otherwise surface as a deep backend conflict mid-program
             dup = sorted(p for p in src_ports if p in seen_src)
-            assert not dup, \
-                f"source ports {dup} appear in multiple handoffs of one " \
-                f"migration program"
+            if dup:
+                raise MigrationContractError(
+                    f"source ports {dup} appear in multiple handoffs of "
+                    f"one migration program")
             seen_src.update(src_ports)
             pairs.extend(zip(src_ports, dst_ports))
             src_jobs.append(src_job)
@@ -334,6 +421,11 @@ class PortAllocator:
         self.policy = policy
         self.owner: Dict[int, str] = {}          # port -> job_id
         self.grants: Dict[str, Tuple[int, ...]] = {}
+        # maintenance-reserved ports (DESIGN.md §14): never granted while
+        # reserved; an owned+reserved port is a drain victim not yet
+        # evicted.  Empty by default, so every pre-ops code path (and all
+        # committed BENCH counters) is untouched.
+        self.reserved: set = set()
         self.n_allocations = 0
         # failed allocate() attempts — NOT distinct jobs turned away: a
         # queued job re-tried at every departure counts once per re-try
@@ -350,7 +442,8 @@ class PortAllocator:
         if self.policy == "contiguous":
             grant = self._first_fit_run(n)
         else:
-            free = [p for p in range(self.n_ports) if p not in self.owner]
+            free = [p for p in range(self.n_ports)
+                    if p not in self.owner and p not in self.reserved]
             grant = tuple(free[:n]) if len(free) >= n else None
         if grant is None:
             self.n_failed_allocs += 1
@@ -373,13 +466,67 @@ class PortAllocator:
                 return tuple(range(start, start + n))
         return None
 
+    # -- maintenance/defrag surface (DESIGN.md §14) --------------------------
+    def reserve(self, ports: Iterable[int]) -> None:
+        """Take ``ports`` out of the allocatable pool (a maintenance
+        window opening).  Owned ports may be reserved — they mark drain
+        victims the scenario engine has yet to evict."""
+        self.reserved.update(ports)
+
+    def unreserve(self, ports: Iterable[int]) -> None:
+        """Return ``ports`` to the allocatable pool (window closing)."""
+        self.reserved.difference_update(ports)
+
+    def peek(self, n: int, below: Optional[int] = None
+             ) -> Optional[Tuple[int, ...]]:
+        """The grant :meth:`allocate` WOULD return, without mutating any
+        state or counters.  With ``below``, only grants lying entirely
+        under that port index qualify — the defrag policy's 'strictly
+        closer to the bottom' compaction test."""
+        assert n >= 1, n
+        if self.policy == "contiguous":
+            for start, length in self.free_runs():
+                if below is not None and start + n > below:
+                    break
+                if length >= n:
+                    return tuple(range(start, start + n))
+            return None
+        free = [p for p in range(self.n_ports)
+                if p not in self.owner and p not in self.reserved]
+        if below is not None:
+            free = [p for p in free if p < below]
+        return tuple(free[:n]) if len(free) >= n else None
+
+    def move(self, job_id: str, new_grant: Tuple[int, ...]
+             ) -> Tuple[int, ...]:
+        """Atomically re-home ``job_id`` onto ``new_grant`` (the commit
+        point of a live migration).  Not an admission: allocation
+        counters are untouched.  Returns the old grant."""
+        old = self.grants[job_id]
+        if len(new_grant) != len(old):
+            raise MigrationContractError(
+                f"move of {job_id!r} pairs {len(old)} held ports with "
+                f"{len(new_grant)} destination ports")
+        clash = sorted(p for p in new_grant
+                       if p in self.owner or p in self.reserved)
+        if clash:
+            raise PortOwnershipError(
+                f"move of {job_id!r} targets owned/reserved ports {clash}")
+        for p in old:
+            assert self.owner.pop(p) == job_id
+        for p in new_grant:
+            self.owner[p] = job_id
+        self.grants[job_id] = tuple(new_grant)
+        return old
+
     # -- telemetry ----------------------------------------------------------
     def free_runs(self) -> List[Tuple[int, int]]:
-        """Maximal free (start, length) runs, ascending by start."""
+        """Maximal allocatable (start, length) runs, ascending by start
+        — free means unowned AND unreserved."""
         runs: List[Tuple[int, int]] = []
         start = None
         for p in range(self.n_ports):
-            if p not in self.owner:
+            if p not in self.owner and p not in self.reserved:
                 if start is None:
                     start = p
             elif start is not None:

@@ -50,6 +50,7 @@ import numpy as np
 
 from repro.core.controller import Controller, GroupState, WriteResult
 from repro.core.fabric import CrossSubSwitchError, FabricSpec, OCSArray
+from repro.core.faults import FaultModel
 from repro.core.orchestrator import RailOrchestrator
 from repro.core.phases import SYM_DIGITS, CommOp, JobConfig
 from repro.core.shim import DEFAULT, STATIC, Action, Shim
@@ -160,6 +161,11 @@ class ControlPlane:
         self.n_ranks = job.pp * job.fsdp * job.cp * job.ep
         self.n_ways = job.pp
         self.ocs_fail = ocs_fail
+        # flap-aware injector (DESIGN.md §14): a FaultModel rides the same
+        # ocs_fail channel but carries outage windows + a recovery policy;
+        # legacy callables leave this None and behave exactly as before
+        self.fault_model = ocs_fail if isinstance(ocs_fail, FaultModel) \
+            else None
         self.listeners = list(listeners)
         self.collapse = collapse
         self.shared_rails = orchestrators is not None
@@ -503,6 +509,39 @@ class ControlPlane:
             o.n_reconfig_events += dre
             o.ocs.n_program_calls += dpc
             o.ocs.n_ports_programmed += dpp
+
+    # -- degrade-and-recover (DESIGN.md §14) --------------------------------
+    def can_recover(self, now: float) -> bool:
+        """True when a demoted job's rails are all clear of outage windows
+        and the fault model allows recovery — the engines poll this at
+        iteration boundaries and call :meth:`recover`."""
+        fm = self.fault_model
+        if fm is None or not fm.recovery \
+                or not self.controller.fallback_giant_ring:
+            return False
+        return all(not fm.down(o.rail_id, now)
+                   for o in self.orchestrators)
+
+    def recover(self, now: float = 0.0) -> float:
+        """Restore the requested topology on every rail and clear the
+        giant-ring demotion (``Controller.recover``).  Returns the repair
+        program's completion time.  ``replay_ready`` keys off the
+        fallback flag, so the replay cache re-promotes by itself."""
+        return self.controller.recover(now)
+
+    def fault_stats(self) -> Dict[str, object]:
+        """Degrade-and-recover counters (DESIGN.md §14).  Deliberately
+        NOT part of ``telemetry()``: the committed BENCH records match
+        integer keys exactly, and these counters are zero everywhere
+        faults are off."""
+        c = self.controller
+        return {
+            "n_retries": c.n_retries,
+            "n_flaps_survived": c.n_flaps_survived,
+            "n_demotions": c.n_demotions,
+            "n_recoveries": c.n_recoveries,
+            "fallback_active": c.fallback_giant_ring,
+        }
 
     # -- observability -------------------------------------------------------
     @property

@@ -153,12 +153,23 @@ class JobRecord:
     ports: Optional[Tuple[int, ...]] = None
     plane: Optional[ControlPlane] = None
     result: Optional[SimResult] = None
+    # operations-scenario lifecycle (DESIGN.md §14) — all dormant (and
+    # the timeline byte-identical) unless a ScenarioEngine acts:
+    first_admitted: Optional[float] = None  # first admission (re-admits
+    #                                         overwrite ``admitted``)
+    n_drains: int = 0             # checkpoint-restart evictions suffered
+    n_migrations: int = 0         # live migrations suffered
+    iters_done: int = 0           # iterations completed before preemption
+    restart_delay_s: float = 0.0  # checkpoint reload stall on re-admit
+    resume_iterations: Optional[int] = None   # remainder after preemption
 
     @property
     def queueing_delay(self) -> Optional[float]:
-        if self.admitted is None:
+        first = self.first_admitted \
+            if self.first_admitted is not None else self.admitted
+        if first is None:
             return None
-        return self.admitted - self.spec.arrival
+        return first - self.spec.arrival
 
 
 class ClusterSim:
@@ -170,7 +181,8 @@ class ClusterSim:
     #: ``EventEngine`` to prove the cluster numbers are engine-invariant.
     ENGINE_CLS = VectorEngine
 
-    def __init__(self, params: ClusterParams):
+    def __init__(self, params: ClusterParams, *,
+                 ops: Optional[object] = None, twin: bool = False):
         self.params = params
         self.allocator = PortAllocator(params.n_ports, params.policy)
         self.spec = params.fabric_spec()
@@ -180,6 +192,22 @@ class ClusterSim:
         self.records: List[JobRecord] = []
         self.events: List[Dict[str, object]] = []
         self._ran = False
+        # operations-scenario driver (duck-typed — repro.sim.ops supplies
+        # the ScenarioEngine; the cluster deliberately does not import it):
+        # bind(sim) at run start, then pending()/next_time()/fire(t) merge
+        # its events into the timeline and on_event() observes departures.
+        # With ops None and twin False every code path below is untouched
+        # and the event timeline is byte-identical to the pre-ops cluster.
+        self.ops = ops
+        self.twin_enabled = twin
+        self._twin_rows: List[Dict[str, object]] = []
+        # merged-timeline state, instance-held so a scenario engine can
+        # preempt/re-queue tenants mid-run (drains, defrag migrations)
+        self._pending: List[JobRecord] = []
+        self._waiting: List[JobRecord] = []
+        self._active: List[Tuple[JobRecord, EventEngine, object, int]] = []
+        self._clocks = np.empty(0, dtype=np.float64)
+        self._seq = 0
 
     # -- submission ----------------------------------------------------------
     def submit(self, spec: ClusterJobSpec,
@@ -196,28 +224,40 @@ class ClusterSim:
     def run(self) -> "ClusterResult":
         assert not self._ran, "a ClusterSim runs once"
         self._ran = True
-        pending = sorted(self.records, key=lambda r: r.spec.arrival)
-        waiting: List[JobRecord] = []
-        # (record, engine, op generator, admission seq), appended in seq
-        # order and removed in place — so the parallel numpy clock array
-        # below stays position-aligned and ties resolve to the LOWEST
-        # index, which is the earliest admission seq: argmin over the
-        # array is exactly the old min(key=(t, seq)) scan, evaluated as
-        # one vectorized reduction instead of a Python loop per event
-        active: List[Tuple[JobRecord, EventEngine, object, int]] = []
-        clocks = np.empty(0, dtype=np.float64)   # clocks[i] == active[i].t
-        seq = 0
+        self._pending = sorted(self.records, key=lambda r: r.spec.arrival)
+        # self._active holds (record, engine, op generator, admission seq),
+        # appended in seq order and removed in place — so the parallel
+        # numpy clock array stays position-aligned and ties resolve to the
+        # LOWEST index, which is the earliest admission seq: argmin over
+        # the array is exactly the old min(key=(t, seq)) scan, evaluated
+        # as one vectorized reduction instead of a Python loop per event
+        ops = self.ops
+        if ops is not None:
+            ops.bind(self)
 
-        while pending or waiting or active:
-            arrival = pending[0].spec.arrival if pending else math.inf
-            if active:
-                idx = int(np.argmin(clocks))
-                clock = float(clocks[idx])
+        while self._pending or self._waiting or self._active or \
+                (ops is not None and ops.pending()):
+            arrival = self._pending[0].spec.arrival \
+                if self._pending else math.inf
+            if self._active:
+                idx = int(np.argmin(self._clocks))
+                clock = float(self._clocks[idx])
             else:
                 idx = -1
                 clock = math.inf
-            if pending and arrival <= clock:
-                rec = pending.pop(0)
+            if ops is not None and ops.pending():
+                # ops events (drain windows opening/closing) fire once the
+                # merged timeline reaches them — ops-first on ties, so a
+                # window opening at t preempts before an arrival at t is
+                # admitted onto ports about to go dark.  Every active
+                # engine clock is >= the argmin, so victims stop at a
+                # clock at or past the window start (causal preemption).
+                op_t = ops.next_time()
+                if op_t <= min(arrival, clock):
+                    ops.fire(op_t)
+                    continue
+            if self._pending and arrival <= clock:
+                rec = self._pending.pop(0)
                 # on an ocs_array rail a tenant's circuits must fit one
                 # sub-switch (DESIGN.md §10), so the hard capacity is the
                 # radix, not the rail
@@ -227,52 +267,58 @@ class ClusterSim:
                 if rec.spec.n_ranks > cap:
                     rec.status = "rejected"     # can NEVER fit
                     self._sample(rec.spec.arrival, "reject", rec)
-                elif waiting or not self._admit(rec, rec.spec.arrival):
+                elif self._waiting or not self._admit(rec,
+                                                      rec.spec.arrival):
                     # FIFO: an arrival never jumps an earlier queued job
-                    waiting.append(rec)
+                    self._waiting.append(rec)
                     self._sample(rec.spec.arrival, "queue", rec)
                 else:
-                    entry = self._start(rec, seq)
-                    active.append(entry)
-                    clocks = np.append(clocks, entry[1].t)
-                    seq += 1
+                    self._activate(rec)
                 continue
-            if not active:
+            if not self._active:
                 # the queue head does not fit an otherwise IDLE cluster:
                 # on a crossbar that is impossible (a feasible job queues
                 # only while others hold its ports), but an ocs_array
                 # grant can straddle a sub-switch boundary under the
                 # fragmented policy with no tenant left to depart —
                 # reject it visibly rather than deadlock, then re-try
-                # the rest of the queue on the empty rail
+                # the rest of the queue on the empty rail.  (Ops events
+                # are exhausted here — the ops-first branch above fires
+                # them all when no engine clock bounds them — so a drain
+                # window can never park ports and strand the queue.)
                 now = max((r.finished for r in self.records
                            if r.finished is not None), default=0.0)
-                rec = waiting.pop(0)
+                rec = self._waiting.pop(0)
                 rec.status = "rejected"
                 self._sample(max(now, rec.spec.arrival), "reject", rec)
-                while waiting and self._admit(
-                        waiting[0], max(now, waiting[0].spec.arrival)):
-                    entry = self._start(waiting.pop(0), seq)
-                    active.append(entry)
-                    clocks = np.append(clocks, entry[1].t)
-                    seq += 1
+                while self._waiting and self._admit(
+                        self._waiting[0],
+                        max(now, self._waiting[0].spec.arrival)):
+                    self._activate(self._waiting.pop(0))
                 continue
-            rec, engine, gen, _ = active[idx]
+            rec, engine, gen, _ = self._active[idx]
             try:
                 next(gen)             # one event of the nearest job (one
-                clocks[idx] = engine.t   # op, or a fast-forward jump)
+                self._clocks[idx] = engine.t  # op, or a fast-forward jump)
             except StopIteration:
-                del active[idx]       # in-place removal preserves seq
-                clocks = np.delete(clocks, idx)   # order for the argmin
+                del self._active[idx]   # in-place removal preserves seq
+                self._clocks = np.delete(self._clocks, idx)  # argmin order
                 self._depart(rec, engine)
                 # departures free ports: re-try the FIFO queue head(s)
-                while waiting and self._admit(waiting[0], rec.finished):
-                    entry = self._start(waiting.pop(0), seq)
-                    active.append(entry)
-                    clocks = np.append(clocks, entry[1].t)
-                    seq += 1
+                self._drain_queue(rec.finished)
         return ClusterResult(self.params, self.records, self.events,
                              self.rails, self.allocator)
+
+    def _activate(self, rec: JobRecord) -> None:
+        entry = self._start(rec, self._seq)
+        self._active.append(entry)
+        self._clocks = np.append(self._clocks, entry[1].t)
+        self._seq += 1
+
+    def _drain_queue(self, now: float) -> None:
+        """Admit FIFO queue head(s) after ports freed at ``now``."""
+        while self._waiting and self._admit(self._waiting[0], now):
+            self._activate(self._waiting.pop(0))
 
     # -- admission / departure ----------------------------------------------
     def _admit(self, rec: JobRecord, now: float) -> bool:
@@ -293,13 +339,15 @@ class ClusterSim:
                              orchestrators=self.rails, ports=grant, now=now)
         rec.ports = grant
         rec.admitted = now
+        if rec.first_admitted is None:
+            rec.first_admitted = now
         rec.status = "running"
         rec.plane = plane           # handed to _start right after
         self._sample(now, "admit", rec)
         return True
 
-    def _start(self, rec: JobRecord,
-               seq: int) -> Tuple[JobRecord, EventEngine, object, int]:
+    def _build_engine(self, rec: JobRecord, *, start: float,
+                      iterations: int) -> EventEngine:
         if rec.spec.workload == "train":
             wl = build(rec.spec.job, self.params.gpu)
         else:
@@ -307,11 +355,13 @@ class ClusterSim:
                                rec.spec.workload.split("_", 1)[1],
                                batch_slots=rec.spec.batch_slots)
         kw = {}
-        if rec.spec.runtime_s is not None:
+        if rec.spec.runtime_s is not None and rec.resume_iterations is None:
             # runtime-sized tenants need the vectorized engine's fast-
-            # forward; the fixed-iteration path works on any engine class
+            # forward; the fixed-iteration path works on any engine class.
+            # A checkpoint-restarted tenant resumes by ITERATION remainder
+            # (the scenario engine sized it), never by re-running runtime.
             kw["min_runtime_s"] = rec.spec.runtime_s
-        engine = self.ENGINE_CLS(
+        return self.ENGINE_CLS(
             wl, SimParams(mode=rec.spec.mode,
                           ocs_latency=self.params.ocs_latency,
                           nic_linkup=self.params.nic_linkup,
@@ -325,8 +375,18 @@ class ClusterSim:
                                      if rec.spec.mode in ("opus",
                                                           "opus_prov")
                                      else None)),
-            plane=rec.plane, start=rec.admitted,
-            iterations=rec.spec.iterations, **kw)
+            plane=rec.plane, start=start, iterations=iterations, **kw)
+
+    def _start(self, rec: JobRecord,
+               seq: int) -> Tuple[JobRecord, EventEngine, object, int]:
+        # restart_delay_s/resume_iterations are 0.0/None outside ops
+        # scenarios, so this is the pre-ops engine construction verbatim
+        # (x + 0.0 is bit-exact for the non-negative admission clock)
+        iterations = rec.spec.iterations if rec.resume_iterations is None \
+            else rec.resume_iterations
+        engine = self._build_engine(
+            rec, start=rec.admitted + rec.restart_delay_s,
+            iterations=iterations)
         return (rec, engine, engine.events(), seq)
 
     def _depart(self, rec: JobRecord, engine: EventEngine) -> None:
@@ -336,10 +396,51 @@ class ClusterSim:
         rec.plane.release(now=rec.finished)
         self.allocator.release(rec.spec.name)
         self._sample(rec.finished, "depart", rec)
+        if self.ops is not None:
+            self.ops.on_event(rec.finished, "depart", rec)
 
     def _sample(self, t: float, event: str, rec: JobRecord) -> None:
-        self.events.append({"t": t, "event": event, "job": rec.spec.name,
+        self._note(t, event, rec.spec.name)
+
+    def _note(self, t: float, event: str, job: str) -> None:
+        """Append one timeline event row (allocator stats snapshot) — and
+        a digital-twin inventory row when twin export is on."""
+        self.events.append({"t": t, "event": event, "job": job,
                             **self.allocator.stats()})
+        if self.twin_enabled:
+            self._twin_tick(t, event, job)
+
+    # -- digital-twin export (DESIGN.md §14) ---------------------------------
+    def _twin_tick(self, t: float, event: str, job: str) -> None:
+        """One JSONL-able inventory row per event tick: switches, ports,
+        circuits, owners — the Turbobulk-style regenerate-and-diff unit."""
+        alloc = self.allocator
+        self._twin_rows.append({
+            "t": t,
+            "event": event,
+            "job": job,
+            "owners": {name: list(g)
+                       for name, g in sorted(alloc.grants.items())},
+            "reserved": sorted(alloc.reserved),
+            "running": sorted(rec.spec.name
+                              for rec, _, _, _ in self._active),
+            "queued": [r.spec.name for r in self._waiting],
+            "switches": [{
+                "rail": o.rail_id,
+                "technology": self.spec.technology,
+                "n_circuits": len(o.ocs.circuits),
+                "n_program_calls": o.ocs.n_program_calls,
+                "n_ports_programmed": o.ocs.n_ports_programmed,
+                "busy_until": o.ocs.busy_until,
+            } for o in self.rails],
+            "circuits": {str(o.rail_id): o.ocs.circuit_snapshot()
+                         for o in self.rails},
+        })
+
+    def twin(self) -> List[Dict[str, object]]:
+        """The digital-twin inventory rows (``ClusterSim(twin=True)``)."""
+        assert self.twin_enabled, "construct ClusterSim(..., twin=True)"
+        return self._twin_rows
 
 
 # ---------------------------------------------------------------------------

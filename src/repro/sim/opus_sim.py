@@ -353,6 +353,10 @@ class EventEngine:
         self.t = start
         self.result: Optional[SimResult] = None
         self._started = False
+        # completed iterations so far (resumable engines can be preempted
+        # mid-run by a maintenance drain; the scenario engine reads this
+        # to size the checkpoint-restart remainder — DESIGN.md §14)
+        self.iterations_done = 0
 
     def events(self):
         """Generator: one workload op per step, yielding the clock after
@@ -377,6 +381,12 @@ class EventEngine:
         exposed_r = exposed_c = 0.0
         tel0: Dict[str, object] = {}
         for iteration in range(self.iterations):  # warmup + measured
+            # degrade-and-recover (DESIGN.md §14): a demoted job whose
+            # rails are clear of outage windows restores the requested
+            # topology at the iteration boundary.  Legacy injectors leave
+            # plane.fault_model None, so this is a no-op exactly as today.
+            if plane.fallback_giant_ring and plane.can_recover(t):
+                t = plane.recover(t)
             plane.start_iteration()
             if iteration == self.iterations - 1:
                 tel0 = plane.telemetry()  # measured-iteration deltas base
@@ -459,6 +469,7 @@ class EventEngine:
                 self.t = t
                 yield t
             step_time = t - t0
+            self.iterations_done = iteration + 1
         # plane telemetry counts the WHOLE plane lifetime (job
         # registration + warmup + measured iteration); the "measured"
         # sub-dict is the steady-state per-iteration delta
@@ -538,8 +549,13 @@ class VectorEngine(EventEngine):
         ctrl_sync, ctrl_async = params.resolved(wl.job.n_gpus)
         meta = _op_meta(wl, params, self.scheduler, self.circuit)
         # fast-forward precondition: a fault injector can fire on any
-        # future dispatch, so a faultable plane is never fast-forwarded
-        ff_ok = plane.ocs_fail is None
+        # future dispatch, so a faultable plane is never fast-forwarded —
+        # EXCEPT a recovering FaultModel, whose flap schedule has a known
+        # horizon: past it nothing can perturb the cycle, so after one
+        # fully-steady live iteration fast-forward RE-ARMS (DESIGN.md
+        # §14).  Legacy callables keep ff permanently off, as before.
+        faultable = plane.ocs_fail is not None
+        ff_fault = plane.fault_model
         target = None if self.min_runtime_s is None \
             else self.t + self.min_runtime_s
 
@@ -554,10 +570,15 @@ class VectorEngine(EventEngine):
         measured: Optional[Dict[str, int]] = None
         snap0 = snap1 = None
         iteration = 0
+        steady = 0      # consecutive fully-steady iterations walked
         while True:
             remaining = self.iterations - iteration
             if remaining <= 0 and (target is None or t >= target):
                 break
+            ff_ok = (not faultable) or (
+                ff_fault is not None and ff_fault.recovery
+                and not plane.fallback_giant_ring
+                and t >= ff_fault.horizon and steady >= 1)
             if captured and ff_ok and plane.replay_ready:
                 # the vectorized walk: every remaining iteration replays
                 # the captured steady cycle in one array-op advance
@@ -569,10 +590,15 @@ class VectorEngine(EventEngine):
                     t = t + k * step_time
                     iteration += k
                     self.fastforwarded_iterations += k
+                    self.iterations_done = iteration
                     self.t = t
                     yield t
                 continue
             # ---- live iteration (bit-identical to EventEngine) ----
+            recovered = False
+            if plane.fallback_giant_ring and plane.can_recover(t):
+                t = plane.recover(t)
+                recovered = True
             plane.start_iteration()
             if not captured:
                 tel0 = plane.telemetry()
@@ -635,6 +661,16 @@ class VectorEngine(EventEngine):
                 yield t
             step_time = t - t0
             iteration += 1
+            self.iterations_done = iteration
+            # steady = no demotion in force, no recovery this iteration
+            # (the first post-repair iteration is transitional: no
+            # provisioned reconfig was pending when it started), and the
+            # whole iteration ran past the flap horizon
+            clean = (not faultable) or (
+                ff_fault is not None and not recovered
+                and t0 >= ff_fault.horizon
+                and not plane.fallback_giant_ring)
+            steady = steady + 1 if clean else 0
             if will_capture:
                 snap1 = plane.counter_snapshot()
                 telc = plane.telemetry()
