@@ -242,6 +242,33 @@ def summary_markdown(records: Dict[str, dict]) -> str:
                          f"{tw['differing_rows']} differ "
                          f"({tw['diff_cells']} cells)")
             lines.append(f"\nwall: {rec['wall_s']}s")
+        elif "calib" in rec:
+            c = rec["calib"]
+            lines.append(
+                f"- fit: **{c['n_entries']} entries** from "
+                f"{c['n_valid']}/{c['n_records']} samples "
+                f"({c['n_skipped']} skipped), target {c['target_gpu']}, "
+                f"measured on {c['backend']}/{c['kernels_mode']}")
+            lines.append(
+                f"- refit reproduces committed table: "
+                f"**{bool(c['refit_matches_committed'])}**; kernel "
+                f"sources match artifact: "
+                f"{bool(c['kernel_sources_match_artifact'])}")
+            lines.append("")
+            lines.append("| config | GPUs | fwd ×analytic | bwd ×analytic "
+                         "| overhead (analytic) | overhead (calibrated) | "
+                         "shift |")
+            lines.append("|---|---:|---:|---:|---:|---:|---:|")
+            for r in rec["configs"]:
+                pd = r["phase_delta"]
+                lines.append(
+                    f"| {r['config']} | {r['n_gpus']} "
+                    f"| {pd['fwd_ratio']:.3g}x "
+                    f"| {pd['bwd_ratio']:.3g}x "
+                    f"| {100 * r['analytic']['overhead_vs_native']:.2f}% "
+                    f"| {100 * r['calibrated']['overhead_vs_native']:.2f}% "
+                    f"| {100 * r['overhead_shift']:+.2f}pp |")
+            lines.append(f"\nwall: {rec['wall_s']}s")
         elif "points" in rec:
             lines.append("| point | GPUs | peak util | frag (peak) | "
                          "mean overhead | max queue delay | OCS queued |")

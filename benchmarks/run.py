@@ -35,9 +35,16 @@ demotes and then repairs (fast-forward re-armed), maintenance drains
 re-placing tenants by checkpoint-restart and by live migration, a
 defrag policy acting on fragmentation telemetry, and a digital-twin
 diff — and writes ``BENCH_opus_ops.json``.
+``--calibrate`` replays the committed kernel-timing artifact
+(benchmarks/baselines/CALIB_opus_timings.json — no live kernel timing in
+CI), refits the per-(kernel, shape-class) CalibrationTable, checks the
+fit reproduces the committed table bit-for-bit, and reports per-phase
+calibrated-vs-analytic compute deltas plus the end-to-end overhead shift
+for three catalog configs (DESIGN.md §15), writing
+``BENCH_opus_calib.json``.
 ``--profile`` wraps whichever mode ran in cProfile and prints the
 top-20 cumulative hotspots.
-CI runs all seven after the smoke subset and gates them against
+CI runs all eight after the smoke subset and gates them against
 benchmarks/baselines/ via benchmarks/check_perf.py (wall-clock ratio +
 exact counter match).
 """
@@ -575,6 +582,136 @@ def ops_report(out_path: str = "BENCH_opus_ops.json") -> dict:
     return rec
 
 
+# -- compute calibration (DESIGN.md §15): per-phase calibrated-vs-analytic
+# deltas on three catalog train shapes (dense / MoE / SSM); the committed
+# timing artifact is REPLAYED (no live kernel timing in CI) so the fitted
+# table and every derived number stay deterministic.
+CALIB_GRID = (
+    ("llama3_8b", dict(tp=4, fsdp=8, pp=1, global_batch=64,
+                       seq_len=4096)),
+    ("deepseek_moe_16b", dict(tp=8, fsdp=8, ep=8, pp=1, global_batch=256,
+                              seq_len=8192)),
+    ("mamba2_370m", dict(tp=2, fsdp=8, pp=1, global_batch=64,
+                         seq_len=4096)),
+)
+
+
+def calib_report(
+        out_path: str = "BENCH_opus_calib.json",
+        artifact_path: str = "benchmarks/baselines/CALIB_opus_timings.json",
+        table_path: str = "benchmarks/baselines/CALIB_opus_table.json",
+) -> dict:
+    """Compute-calibration record (DESIGN.md §15): refit the committed
+    timing artifact, assert the fit reproduces the committed table, and
+    report per-phase calibrated-vs-analytic compute deltas plus the
+    end-to-end overhead shift for three catalog configs.  The calibrated
+    runs exercise the ``SimParams(calibration=)`` threading end to end —
+    the same workload objects every tenant of a calibrated cluster or
+    fleet would receive."""
+    from repro.analysis.calibrate import CalibrationTable, TimingArtifact
+    from repro.configs.base import get_config
+    from repro.core import phases as ph
+    from repro.profiling.microbench import kernel_hash
+    from repro.sim.opus_sim import SimParams, simulate
+    from repro.sim.workload import build, build_serving
+
+    print("== compute calibration: measured kernels vs analytic mfu ==")
+    t_all = time.perf_counter()
+    art = TimingArtifact.load(artifact_path)
+    table = CalibrationTable.fit(art)
+    committed = Path(table_path).read_text()
+    refit_matches = int(table.to_json() + "\n" == committed)
+    sources_match = int(art.provenance.get("kernel_hash") == kernel_hash())
+    phase_keys = [k for k in table.keys()
+                  if k in ("train_fwd", "train_bwd", "prefill", "decode")]
+    calib = {
+        "n_records": len(art.records),
+        "n_valid": sum(r.valid for r in art.records),
+        "n_skipped": sum(r.skipped for r in art.records),
+        "n_entries": len(table.entries),
+        "n_keys": len(table.keys()),
+        "n_phase_keys": len(phase_keys),
+        "refit_matches_committed": refit_matches,
+        "kernel_sources_match_artifact": sources_match,
+        "target_gpu": table.target_gpu,
+        "backend": str(art.provenance.get("backend")),
+        "kernels_mode": str(art.provenance.get("kernels_mode")),
+    }
+    print(f"  artifact: {calib['n_valid']}/{calib['n_records']} valid "
+          f"samples ({calib['n_skipped']} skipped), "
+          f"{calib['n_entries']} fitted entries, refit==committed: "
+          f"{bool(refit_matches)}, sources==artifact: "
+          f"{bool(sources_match)}")
+
+    rows = []
+    for name, shape in CALIB_GRID:
+        job = ph.JobConfig(model=get_config(name), **shape)
+        wa = build(job, "h200")
+        wc = build(job, "h200", table)
+        nat_a = simulate(wa, SimParams(mode="native")).step_time
+        nat_c = simulate(wc, SimParams(mode="native")).step_time
+        ra = simulate(wa, SimParams(mode="opus_prov", ocs_latency=0.01))
+        # the calibrated run goes through SimParams(calibration=) on the
+        # ANALYTIC workload: simulate() re-derives it under the table
+        rc = simulate(wa, SimParams(mode="opus_prov", ocs_latency=0.01,
+                                    calibration=table))
+        # serving replicas are TP x FSDP meshes (serve/step.py), so the
+        # serving-phase deltas use the same model on a replica-shaped job
+        sjob = ph.JobConfig(model=job.model, tp=shape["tp"],
+                            fsdp=shape["fsdp"],
+                            global_batch=shape["global_batch"],
+                            seq_len=shape["seq_len"])
+        pa = build_serving(sjob, "h200", "prefill", prompt_tokens=2048)
+        pc = build_serving(sjob, "h200", "prefill", prompt_tokens=2048,
+                           calibration=table)
+        da = build_serving(sjob, "h200", "decode", batch_slots=16)
+        dc = build_serving(sjob, "h200", "decode", batch_slots=16,
+                           calibration=table)
+        row = {
+            "config": name, "n_gpus": job.n_gpus,
+            "analytic": {
+                "t_fwd_layer_s": round(wa.t_fwd_layer, 9),
+                "t_bwd_layer_s": round(wa.t_bwd_layer, 9),
+                "native_step_s": round(nat_a, 6),
+                "modeled_step_s": round(ra.step_time, 6),
+                "overhead_vs_native": round(ra.step_time / nat_a - 1, 6),
+                "n_reconfigs": ra.n_reconfigs,
+            },
+            "calibrated": {
+                "t_fwd_layer_s": round(wc.t_fwd_layer, 6),
+                "t_bwd_layer_s": round(wc.t_bwd_layer, 6),
+                "native_step_s": round(nat_c, 6),
+                "modeled_step_s": round(rc.step_time, 6),
+                "overhead_vs_native": round(rc.step_time / nat_c - 1, 6),
+                "n_reconfigs": rc.n_reconfigs,
+            },
+            "phase_delta": {
+                "fwd_ratio": round(wc.t_fwd_layer / wa.t_fwd_layer, 4),
+                "bwd_ratio": round(wc.t_bwd_layer / wa.t_bwd_layer, 4),
+                "prefill_ratio": round(pc.t_fwd_layer / pa.t_fwd_layer, 4),
+                "decode_ratio": round(dc.t_fwd_layer / da.t_fwd_layer, 4),
+            },
+            "overhead_shift": round(
+                (rc.step_time / nat_c - 1) - (ra.step_time / nat_a - 1),
+                6),
+            "counters_match": int(ra.n_reconfigs == rc.n_reconfigs),
+        }
+        rows.append(row)
+        print(f"  {name:22s} {job.n_gpus:4d} GPUs: fwd x"
+              f"{row['phase_delta']['fwd_ratio']:.3g}, bwd x"
+              f"{row['phase_delta']['bwd_ratio']:.3g}  overhead "
+              f"{100 * row['analytic']['overhead_vs_native']:6.2f}% -> "
+              f"{100 * row['calibrated']['overhead_vs_native']:6.2f}% "
+              f"(shift {100 * row['overhead_shift']:+.2f}pp)")
+
+    wall = time.perf_counter() - t_all
+    rec = {"bench": "opus_compute_calibration", "wall_s": round(wall, 4),
+           "calib": calib, "configs": rows}
+    Path(out_path).write_text(json.dumps(rec, indent=2) + "\n")
+    print(f"  wall={wall:.3f}s  -> {out_path}")
+    return rec
+
+
 def _profiled(fn):
     """Run ``fn`` under cProfile; print the top-20 cumulative hotspots
     (and append them to $GITHUB_STEP_SUMMARY when set)."""
@@ -632,6 +769,11 @@ def main():
                          "scenarios, DESIGN.md §14: flap storm + "
                          "recovery, maintenance drains, defrag, twin "
                          "diff) and exit")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="replay the committed kernel-timing artifact, "
+                         "refit the CalibrationTable, and report "
+                         "calibrated-vs-analytic compute deltas "
+                         "(BENCH_opus_calib.json)")
     ap.add_argument("--scheduler", default="phase_boundary",
                     choices=["phase_boundary", "per_collective"],
                     help="circuit-scheduling granularity for --perf "
@@ -662,6 +804,9 @@ def main():
         return 0
     if args.ops:
         run(ops_report)
+        return 0
+    if args.calibrate:
+        run(calib_report)
         return 0
 
     def paper_suite():

@@ -1,0 +1,68 @@
+"""Live kernel calibration: measure, fit, and write the artifacts
+(DESIGN.md §15).
+
+    PYTHONPATH=src python examples/calibrate_kernels.py
+    PYTHONPATH=src python examples/calibrate_kernels.py \
+        --out benchmarks/baselines/CALIB_opus_timings.json \
+        --table benchmarks/baselines/CALIB_opus_table.json
+    REPRO_KERNELS=pallas PYTHONPATH=src python examples/calibrate_kernels.py \
+        --full --gpu h200     # on real accelerator hardware
+
+Times the real kernels (through the :mod:`repro.kernels.ops` dispatcher)
+and the compiled train/serve step phases, pairs every sample with the
+trip-count-corrected FLOPs/bytes from ``analysis.hlo_cost``, fits the
+per-(kernel, shape-class) effective-MFU table, and writes BOTH artifacts:
+the raw timing record (commit it so CI can replay the fit without live
+timing) and the fitted CalibrationTable.  Feed the table to any simulator
+entry point via ``SimParams(calibration=CalibrationTable.load(path))`` —
+or ClusterParams/FleetParams/PlannerConfig, which thread it the same way.
+"""
+import argparse
+
+from repro.analysis.calibrate import CalibrationTable
+from repro.profiling.microbench import run_suite
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="CALIB_timings.json",
+                    help="timing-artifact output path")
+    ap.add_argument("--table", default="CALIB_table.json",
+                    help="fitted CalibrationTable output path")
+    ap.add_argument("--gpu", default="h200",
+                    help="target GPU kind the effective MFUs are quoted "
+                         "against")
+    ap.add_argument("--full", action="store_true",
+                    help="full-config shape classes (real hardware); "
+                         "default uses the catalog smoke shapes")
+    ap.add_argument("--repeats", type=int, default=5)
+    args = ap.parse_args()
+
+    art = run_suite(smoke=not args.full, repeats=args.repeats,
+                    target_gpu=args.gpu,
+                    progress=lambda s: print(f"  timing {s}"))
+    art.save(args.out)
+    n_ok = sum(r.valid for r in art.records)
+    n_skip = sum(r.skipped for r in art.records)
+    print(f"\n{len(art.records)} records ({n_ok} valid, {n_skip} skipped) "
+          f"-> {args.out}")
+    for r in art.records:
+        if r.skipped:
+            print(f"  skipped {r.key}/{r.shape_class}: {r.skip_reason}")
+
+    table = CalibrationTable.fit(art)
+    table.save(args.table)
+    print(f"\n== fitted effective throughput (target {table.target_gpu}) ==")
+    print(f"  {'key':20s} {'class':16s} {'n':>2s} {'achieved FLOP/s':>15s} "
+          f"{'eff MFU':>10s} {'eff HBM':>8s} {'rms':>6s}")
+    for e in table.entries:
+        hbm = f"{e.eff_hbm:8.3f}" if e.eff_hbm is not None else "       -"
+        print(f"  {e.key:20s} {e.shape_class:16s} {e.n_samples:2d} "
+              f"{e.achieved_flops_per_s:15.4g} {e.eff_mfu:10.3g} "
+              f"{hbm} {e.rms_rel_err:6.3f}")
+    print(f"-> {args.table}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -12,19 +12,25 @@ the bottleneck attribution distinguishes scale-up from rail pressure.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict
 
-PEAK_FLOPS = 197e12         # bf16 / chip
-HBM_BW = 819e9              # bytes/s / chip
-ICI_LINK_BW = 50e9          # bytes/s / link
-ICI_LINKS = 2               # ring degree (paper: 2-degree scale-out)
-SCALEUP_LINKS = 4           # intra-domain links per chip
+from repro.hardware import PROFILES, HardwareProfile
+
+# Back-compat aliases: the chip description now lives in repro.hardware
+# (one HardwareProfile per GPU kind, shared with sim/workload's GPUSpec);
+# these module constants stay bound to the dry-run platform's profile.
+_V5E = PROFILES["tpu_v5e"]
+PEAK_FLOPS = _V5E.flops         # bf16 / chip
+HBM_BW = _V5E.hbm_bw            # bytes/s / chip
+ICI_LINK_BW = _V5E.ici_link_bw  # bytes/s / link
+ICI_LINKS = _V5E.ici_links      # ring degree (paper: 2-degree scale-out)
+SCALEUP_LINKS = _V5E.scaleup_links  # intra-domain links per chip
 
 
 @dataclass
 class Roofline:
-    """All hlo_*/\*_bytes quantities are PER-DEVICE (the compiled module is
+    r"""All hlo_*/\*_bytes quantities are PER-DEVICE (the compiled module is
     the SPMD per-partition program, with while-loop trip counts applied by
     analysis.hlo_cost).  model_flops is GLOBAL (6ND over the global batch).
     """
@@ -38,22 +44,25 @@ class Roofline:
     rail_bytes: float            # per-device, data+pod collectives
     scaleup_bytes: float         # per-device, model-axis collectives
     model_flops: float           # GLOBAL useful FLOPs
+    profile: HardwareProfile = field(default=_V5E)
 
     @property
     def t_compute(self) -> float:
-        return self.hlo_flops / PEAK_FLOPS
+        return self.hlo_flops / self.profile.flops
 
     @property
     def t_memory(self) -> float:
-        return self.hlo_bytes / HBM_BW
+        return self.hlo_bytes / self.profile.hbm_bw
 
     @property
     def t_rail(self) -> float:
-        return self.rail_bytes / (ICI_LINKS * ICI_LINK_BW)
+        return self.rail_bytes / (self.profile.ici_links
+                                  * self.profile.ici_link_bw)
 
     @property
     def t_scaleup(self) -> float:
-        return self.scaleup_bytes / (SCALEUP_LINKS * ICI_LINK_BW)
+        return self.scaleup_bytes / (self.profile.scaleup_links
+                                     * self.profile.ici_link_bw)
 
     @property
     def t_collective(self) -> float:
@@ -80,7 +89,7 @@ class Roofline:
     @property
     def roofline_fraction(self) -> float:
         """Achievable MFU bound: useful compute time / step bound."""
-        t_useful = self.model_flops / (self.chips * PEAK_FLOPS)
+        t_useful = self.model_flops / (self.chips * self.profile.flops)
         return t_useful / max(self.step_bound, 1e-30)
 
     def row(self) -> Dict:
@@ -99,12 +108,12 @@ class Roofline:
         }
 
 
-def from_corrected(arch, shape, mesh_name, chips, cc, model_flops
-                   ) -> Roofline:
+def from_corrected(arch, shape, mesh_name, chips, cc, model_flops, *,
+                   profile: HardwareProfile = _V5E) -> Roofline:
     """Build from analysis.hlo_cost.CorrectedCost (per-device)."""
     coll = cc.collective_bytes
     rail = float(coll.get("data", {}).get("_bytes", 0)
                  + coll.get("pod", {}).get("_bytes", 0))
     sup = float(coll.get("model", {}).get("_bytes", 0))
     return Roofline(arch, shape, mesh_name, chips, cc.flops,
-                    cc.bytes_accessed, rail, sup, model_flops)
+                    cc.bytes_accessed, rail, sup, model_flops, profile)

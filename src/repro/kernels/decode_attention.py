@@ -59,18 +59,59 @@ def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, m_scr, l_scr,
         o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _decode(q, k_cache, v_cache, valid_mask, scale, block_k, interpret):
+    return _decode_fwd(q, k_cache, v_cache, valid_mask, scale, block_k,
+                       interpret)
+
+
+def _decode_vjp_fwd(q, k_cache, v_cache, valid_mask, scale, block_k,
+                    interpret):
+    out = _decode_fwd(q, k_cache, v_cache, valid_mask, scale, block_k,
+                      interpret)
+    return out, (q, k_cache, v_cache, valid_mask)
+
+
+def _decode_vjp_bwd(scale, block_k, interpret, res, g):
+    # pallas_call has no AD rule: recompute through the jnp oracle (exact
+    # same math, asserted allclose in tests); the mask is non-float
+    import numpy as np
+    q, k_cache, v_cache, valid_mask = res
+    out, vjp = jax.vjp(
+        lambda q_, k_, v_: ref.decode_attention(q_, k_, v_, valid_mask,
+                                                scale=scale), q, k_cache,
+        v_cache)
+    dq, dk, dv = vjp(g.astype(out.dtype))
+    return dq, dk, dv, np.zeros(valid_mask.shape, jax.dtypes.float0)
+
+
+_decode.defvjp(_decode_vjp_fwd, _decode_vjp_bwd)
+
+
 def decode_attention(q, k_cache, v_cache, valid_mask, *,
                      scale: Optional[float] = None, block_k: int = 1024,
                      interpret: bool = False) -> jnp.ndarray:
-    """q [B,1,H,dh]; k/v_cache [B,C,KV,dh]; valid_mask [B,C] -> [B,1,H,dh]."""
+    """q [B,1,H,dh]; k/v_cache [B,C,KV,dh]; valid_mask [B,C] -> [B,1,H,dh].
+
+    Differentiable: grads recompute through ``ref.decode_attention``'s
+    VJP (the Pallas forward has no AD rule).
+    """
     b, _, h, dh = q.shape
-    c, kvh = k_cache.shape[1], k_cache.shape[2]
-    rep = h // kvh
+    c = k_cache.shape[1]
     scale = scale if scale is not None else 1.0 / (dh ** 0.5)
     block_k = min(block_k, c)
     if c % block_k:
         return ref.decode_attention(q, k_cache, v_cache, valid_mask,
                                     scale=scale)
+    return _decode(q, k_cache, v_cache, valid_mask, scale, block_k,
+                   interpret)
+
+
+def _decode_fwd(q, k_cache, v_cache, valid_mask, scale, block_k,
+                interpret):
+    b, _, h, dh = q.shape
+    c, kvh = k_cache.shape[1], k_cache.shape[2]
+    rep = h // kvh
     nk = c // block_k
 
     qt = q.reshape(b, kvh, rep, dh)                         # [B,KV,rep,dh]

@@ -72,6 +72,32 @@ def _ssd_kernel(x_ref, dt_ref, da_ref, b_ref, c_ref, y_ref, st_ref,
         st_ref[0, 0] = state_scr[...].astype(st_ref.dtype)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _ssd(x, dt, a, b_mat, c_mat, chunk, interpret):
+    return _ssd_fwd(x, dt, a, b_mat, c_mat, chunk, interpret)
+
+
+def _ssd_vjp_fwd(x, dt, a, b_mat, c_mat, chunk, interpret):
+    out = _ssd_fwd(x, dt, a, b_mat, c_mat, chunk, interpret)
+    return out, (x, dt, a, b_mat, c_mat)
+
+
+def _ssd_vjp_bwd(chunk, interpret, res, g):
+    # pallas_call has no AD rule: recompute through the jnp oracle, whose
+    # VJP is exact for the same math (tests assert fwd allclose)
+    x, dt, a, b_mat, c_mat = res
+    from repro.models.ssm import ssd_chunked
+    outs, vjp = jax.vjp(
+        lambda x_, dt_, a_, b_, c_: ssd_chunked(x_, dt_, a_, b_, c_,
+                                                chunk), x, dt, a, b_mat,
+        c_mat)
+    g = tuple(gg.astype(oo.dtype) for gg, oo in zip(g, outs))
+    return vjp(g)
+
+
+_ssd.defvjp(_ssd_vjp_fwd, _ssd_vjp_bwd)
+
+
 def ssd(x, dt, a, b_mat, c_mat, chunk: int, h_init=None,
         interpret: bool = False):
     """Pallas SSD.  Same contract as models.ssm.ssd_chunked.
@@ -79,10 +105,17 @@ def ssd(x, dt, a, b_mat, c_mat, chunk: int, h_init=None,
     x [B,S,H,P], dt [B,S,H], a [H], b/c [B,S,G,N] ->
       (y [B,S,H,P], final_state [B,H,P,N]).
     h_init falls back to the jnp oracle (prefill continuation path).
+    Differentiable: the backward pass recomputes through the oracle's
+    VJP (the Pallas forward itself has no AD rule), so SSM archs train
+    under ``REPRO_KERNELS=pallas`` instead of crashing in grad.
     """
     if h_init is not None:
         from repro.models.ssm import ssd_chunked
         return ssd_chunked(x, dt, a, b_mat, c_mat, chunk, h_init=h_init)
+    return _ssd(x, dt, a, b_mat, c_mat, chunk, interpret)
+
+
+def _ssd_fwd(x, dt, a, b_mat, c_mat, chunk, interpret):
     bsz, s, h, p = x.shape
     g, n = b_mat.shape[2], b_mat.shape[3]
     rep = h // g

@@ -1,0 +1,7 @@
+"""Microbenchmark harness for the real kernels/steps (DESIGN.md §15)."""
+from repro.profiling.microbench import (BenchCase, kernel_cases,
+                                        kernel_hash, measure_case,
+                                        phase_records, run_suite)
+
+__all__ = ["BenchCase", "kernel_cases", "kernel_hash", "measure_case",
+           "phase_records", "run_suite"]

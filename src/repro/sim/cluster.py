@@ -88,6 +88,8 @@ class ClusterParams:
     # tenants; oneshot tenants patch circuits once and always run
     # phase_boundary (a static fabric has no rounds to schedule)
     scheduler: str = "phase_boundary"
+    # measured compute calibration (DESIGN.md §15); None = analytic mfu
+    calibration: object = None
 
     def fabric_spec(self) -> FabricSpec:
         return FabricSpec(technology=self.backend, n_rails=self.n_rails,
@@ -349,11 +351,13 @@ class ClusterSim:
     def _build_engine(self, rec: JobRecord, *, start: float,
                       iterations: int) -> EventEngine:
         if rec.spec.workload == "train":
-            wl = build(rec.spec.job, self.params.gpu)
+            wl = build(rec.spec.job, self.params.gpu,
+                       self.params.calibration)
         else:
             wl = build_serving(rec.spec.job, self.params.gpu,
                                rec.spec.workload.split("_", 1)[1],
-                               batch_slots=rec.spec.batch_slots)
+                               batch_slots=rec.spec.batch_slots,
+                               calibration=self.params.calibration)
         kw = {}
         if rec.spec.runtime_s is not None and rec.resume_iterations is None:
             # runtime-sized tenants need the vectorized engine's fast-
@@ -460,7 +464,8 @@ class ClusterResult:
     def _native_step(self, spec: ClusterJobSpec) -> float:
         key = (spec.job, self.params.gpu)
         if key not in self._native_cache:
-            wl = build(spec.job, self.params.gpu)
+            wl = build(spec.job, self.params.gpu,
+                       self.params.calibration)
             self._native_cache[key] = simulate(
                 wl, SimParams(mode="native")).step_time
         return self._native_cache[key]

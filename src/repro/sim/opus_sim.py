@@ -101,6 +101,10 @@ class SimParams:
     radix: Optional[int] = None   # OCSArray sub-switch radix
     scheduler: Optional[str] = None  # circuit-scheduling granularity (§13)
     fabric: Optional[FabricSpec] = None   # full spec override
+    # measured compute calibration (repro.analysis.calibrate, §15): the
+    # workload is re-derived under this table before any engine runs;
+    # None keeps the analytic gpu.mfu denominator bit-identical to seed
+    calibration: Optional[object] = None
 
     def fabric_spec(self) -> FabricSpec:
         """The declarative fabric behind these params (validated against
@@ -197,6 +201,9 @@ def simulate(wl: TimedWorkload, params: SimParams, *,
     if params.static_fabric:
         assert ocs_fail is None, \
             f"mode={params.mode!r} never reconfigures: nothing to fail"
+    if params.calibration is not None:
+        from repro.sim.workload import recalibrate
+        wl = recalibrate(wl, params.calibration)
     eng = engine if engine is not None else "event"
     if eng == "analytic":
         assert ocs_fail is None, "fault injection needs the event engine"

@@ -123,6 +123,9 @@ class PlannerConfig:
     schedulers: Tuple[str, ...] = (PHASE_BOUNDARY,)
     #: reference fleet the Fig-14 bill prices each cell at
     bill_gpus: int = 16384
+    #: measured compute calibration (DESIGN.md §15) applied to every
+    #: probe's workloads; None keeps the analytic mfu denominator
+    calibration: object = None
 
     # -- train probe: the paper's 512-GPU fabric-sweep job (64 scale-out
     # ranks) — large enough that per-op shim control amortizes and the
@@ -245,7 +248,7 @@ def _train_point(cell: PlannerCell, cfg: PlannerConfig,
     key = (cell.backend, cell.radix, cell.n_rails, cell.ocs_latency,
            cell.scheduler)
     if key not in cache:
-        wl = build(cfg.train_job(), cfg.gpu)
+        wl = build(cfg.train_job(), cfg.gpu, cfg.calibration)
         if "native" not in cache:
             cache["native"] = simulate(wl, SimParams(mode="native"))
         nat = cache["native"].step_time
@@ -297,7 +300,7 @@ def _cluster_point(cell: PlannerCell,
         n_ports=cell.n_ports, policy=cell.policy,
         ocs_latency=cell.ocs_latency, gpu=cfg.gpu, n_rails=cell.n_rails,
         backend=cell.backend, radix=cell.radix,
-        scheduler=cell.scheduler))
+        scheduler=cell.scheduler, calibration=cfg.calibration))
     s = res.summary()
     return {
         "mode": mode,
@@ -332,7 +335,8 @@ def _serving_point(cell: PlannerCell,
     params = FleetParams(n_ports=cell.n_ports, policy=cell.policy,
                          ocs_latency=cell.ocs_latency, gpu=cfg.gpu,
                          n_rails=cell.n_rails, backend=cell.backend,
-                         radix=cell.radix, scheduler=cell.scheduler)
+                         radix=cell.radix, scheduler=cell.scheduler,
+                         calibration=cfg.calibration)
     s = simulate_fleet(params, prefill, decode, trace).summary()
     return {
         "throughput_rps": s["throughput_rps"],

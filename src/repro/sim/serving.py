@@ -113,6 +113,8 @@ class FleetParams:
     # circuit-scheduling granularity (DESIGN.md §13) for reconfiguring
     # replica pools; static (oneshot/packet) pools stay phase_boundary
     scheduler: str = "phase_boundary"
+    # measured compute calibration (DESIGN.md §15); None = analytic mfu
+    calibration: object = None
     # KV handoff
     handoff_interval_s: float = 0.05   # circuit-fabric flush cadence
     relay_bw_factor: float = 0.5       # cross-sub-switch relay penalty
@@ -308,7 +310,8 @@ class ServingFleet:
                              ports=grant, now=now)
         wl = build_serving(pool.job, self.params.gpu, kind,
                            batch_slots=pool.batch_slots,
-                           prompt_tokens=pool.ref_prompt_tokens)
+                           prompt_tokens=pool.ref_prompt_tokens,
+                           calibration=self.params.calibration)
         # replica steps are priced through the same vectorized core the
         # training engine runs (DESIGN.md §12); a one/two-iteration
         # serving step never fast-forwards, so the numbers are

@@ -14,6 +14,7 @@ from typing import Dict, List, Optional
 from repro.configs.base import ModelConfig
 from repro.core.phases import (CommOp, JobConfig, build_phase_table,
                                iteration_schedule, phase_index_of)
+from repro.hardware import PROFILES
 
 
 @dataclass(frozen=True)
@@ -27,34 +28,57 @@ class GPUSpec:
     tdp_w: float = 700.0    # board power (context for the fleet req/s-per-W)
 
 
+# Derived from the shared per-chip description (repro.hardware.PROFILES,
+# DESIGN.md §15) so the simulator and the roofline can never disagree on
+# what a chip is; the float values are bit-identical to the seed table.
 GPUS: Dict[str, GPUSpec] = {
-    # Perlmutter node: 4x A100, Slingshot-11 (200 Gb/s per NIC), NVLink3
-    "a100": GPUSpec("a100", 312e12, 0.35, 200.0, 1600.0, 4, tdp_w=400.0),
-    # DGX H200: 8 GPUs, CX-7 400 Gb/s, NVLink4
-    "h200": GPUSpec("h200", 989e12, 0.40, 400.0, 3600.0, 8, tdp_w=700.0),
-    # GB200 NVL72: 800 Gb/s scale-out per GPU (paper §5.3)
-    "gb200": GPUSpec("gb200", 2500e12, 0.40, 800.0, 14400.0, 8,
-                     tdp_w=1200.0),
-    # TPU v5e-like (for the dry-run cross-checks)
-    "tpu_v5e": GPUSpec("tpu_v5e", 197e12, 0.45, 400.0, 1600.0, 16,
-                       tdp_w=220.0),
+    name: GPUSpec(p.name, p.flops, p.mfu, p.scale_out_gbps,
+                  p.scale_up_gbps, p.domain, tdp_w=p.tdp_w)
+    for name, p in PROFILES.items()
 }
 
 
 def layer_flops(model: ModelConfig, tokens: int) -> float:
     """Approximate fwd FLOPs of one layer over ``tokens`` tokens (6ND/L
-    style dense estimate; MoE counts active experts only)."""
+    style dense estimate; MoE counts active experts only).  SSM/hybrid
+    patterns average the mixer cost over one period: a "mamba" entry
+    counts the in/out projections, the short conv, and the dominant SSD
+    chunk terms — before this the SSD mixer priced at ZERO FLOPs, so a
+    pure-SSM config (mamba2_370m) got a zero-second compute denominator
+    (defect exposed by the §15 calibration probe)."""
     d, f = model.d_model, model.d_ff
-    dh = model.resolved_head_dim if model.n_heads else 0
-    attn_proj = 2 * tokens * d * dh * (model.n_heads + 2 * model.n_kv_heads) \
-        + 2 * tokens * model.n_heads * dh * d
+    pattern = model.pattern
+    mixer = 0
+    for kind in pattern:
+        if kind == "mamba" and model.ssm is not None:
+            s = model.ssm
+            d_in = s.expand * d
+            n_h = d_in // s.head_dim
+            g, n = s.n_groups, s.state_dim
+            # zxBCdt in-projection + out-projection
+            mixer += 2 * tokens * d * (2 * d_in + 2 * g * n + n_h) \
+                + 2 * tokens * d_in * d
+            # depthwise causal conv over (x, B, C) channels
+            mixer += 2 * tokens * (d_in + 2 * g * n) * s.conv_width
+            # SSD: intra-chunk [L,L] mix + state read/write against N
+            mixer += 2 * tokens * s.chunk_size * (g * n + d_in) \
+                + 4 * tokens * d_in * n
+        else:
+            dh = model.resolved_head_dim if model.n_heads else 0
+            mixer += 2 * tokens * d * dh * (model.n_heads
+                                            + 2 * model.n_kv_heads) \
+                + 2 * tokens * model.n_heads * dh * d
     if model.moe:
         de = model.moe.d_expert or f
         act = model.moe.top_k + model.moe.n_shared_experts
         ffn = 2 * tokens * 3 * d * de * act
     else:
         ffn = 2 * tokens * 3 * d * f
-    return float(attn_proj + ffn)
+    if len(pattern) == 1:
+        # single-kind patterns keep the exact integer-sum-then-convert of
+        # the original estimate (bit-identity with every committed BENCH)
+        return float(mixer + ffn)
+    return float(mixer) / len(pattern) + float(ffn)
 
 
 @dataclass(frozen=True)
@@ -64,6 +88,12 @@ class TimedWorkload:
     ops: List[CommOp]
     t_fwd_layer: float
     t_bwd_layer: float
+    # build provenance: enough to re-derive this workload under a different
+    # compute calibration (repro.analysis.calibrate, DESIGN.md §15)
+    kind: str = "train"                  # train | prefill | decode
+    batch_slots: int = 1
+    prompt_tokens: Optional[int] = None
+    calibration: Optional[object] = None  # CalibrationTable or None
 
     def comm_time(self, op: CommOp, *, bandwidth_gbps: float,
                   base_latency: float = 5e-6) -> float:
@@ -156,19 +186,32 @@ class TimedWorkload:
 
 
 @lru_cache(maxsize=256)
-def build(job: JobConfig, gpu_name: str) -> TimedWorkload:
+def build(job: JobConfig, gpu_name: str,
+          calibration=None) -> TimedWorkload:
     gpu = GPUS[gpu_name]
     mb_tokens = job.global_batch // job.fsdp // job.microbatches * job.seq_len
     lf = layer_flops(job.model, mb_tokens) / job.tp
     t_fwd = lf / (gpu.flops * gpu.mfu)
     t_bwd = 2.0 * t_fwd
+    if calibration is not None:
+        # measured per-(phase, shape-class) effective throughput replaces
+        # the flat gpu.mfu denominator (DESIGN.md §15); the analytic value
+        # stays the fallback for phases the artifact never measured
+        from repro.configs.base import canonical
+        sc = canonical(job.model.name)
+        t_fwd = calibration.compute_time("train_fwd", lf, default=t_fwd,
+                                         shape_class=sc)
+        t_bwd = calibration.compute_time("train_bwd", 2.0 * lf,
+                                         default=t_bwd, shape_class=sc)
     ops = iteration_schedule(job, t_fwd_layer=t_fwd, t_bwd_layer=t_bwd)
-    return TimedWorkload(job, gpu, ops, t_fwd, t_bwd)
+    return TimedWorkload(job, gpu, ops, t_fwd, t_bwd,
+                         calibration=calibration)
 
 
 def build_serving(job: JobConfig, gpu_name: str, kind: str, *,
                   batch_slots: int = 1,
-                  prompt_tokens: Optional[int] = None) -> TimedWorkload:
+                  prompt_tokens: Optional[int] = None,
+                  calibration=None) -> TimedWorkload:
     """Timed workload of ONE serving step (DESIGN.md §11).
 
     ``kind`` selects the serve/step.py shape: ``"prefill"`` processes one
@@ -185,7 +228,29 @@ def build_serving(job: JobConfig, gpu_name: str, kind: str, *,
         tokens = prompt_tokens if prompt_tokens is not None else job.seq_len
     else:
         tokens = batch_slots          # one token per resident slot
-    t_layer = layer_flops(job.model, tokens) / job.tp / (gpu.flops * gpu.mfu)
+    lf = layer_flops(job.model, tokens) / job.tp
+    t_layer = lf / (gpu.flops * gpu.mfu)
+    if calibration is not None:
+        from repro.configs.base import canonical
+        t_layer = calibration.compute_time(kind, lf, default=t_layer,
+                                           shape_class=canonical(
+                                               job.model.name))
     ops = serving_schedule(job, kind, batch_slots=batch_slots,
                            t_layer=t_layer)
-    return TimedWorkload(job, gpu, ops, t_layer, 0.0)
+    return TimedWorkload(job, gpu, ops, t_layer, 0.0, kind=kind,
+                         batch_slots=batch_slots,
+                         prompt_tokens=prompt_tokens,
+                         calibration=calibration)
+
+
+def recalibrate(wl: TimedWorkload, calibration) -> TimedWorkload:
+    """``wl`` re-derived under ``calibration`` (identity when it already
+    carries the same table — the default path rebuilds nothing)."""
+    if wl.calibration is calibration:
+        return wl
+    if wl.kind == "train":
+        return build(wl.job, wl.gpu.name, calibration)
+    return build_serving(wl.job, wl.gpu.name, wl.kind,
+                         batch_slots=wl.batch_slots,
+                         prompt_tokens=wl.prompt_tokens,
+                         calibration=calibration)

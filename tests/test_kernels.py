@@ -163,3 +163,54 @@ def test_decode_stats_merge_equals_full():
         acc2 * jnp.exp(m2 - mg)[..., None]
     merged = (acc / l[..., None]).reshape(b, 1, h, dh)
     np.testing.assert_allclose(merged, full, atol=1e-5)
+
+
+def test_pallas_ssd_grads_match_oracle():
+    # pallas_call has no AD rule; ssd carries a custom_vjp that recomputes
+    # through the jnp oracle.  Before it, SSM archs crashed in jax.grad
+    # under REPRO_KERNELS=pallas (defect exposed by the §15 calibration
+    # microbenchmarks).
+    b, s, h, p, g, n = 1, 32, 4, 16, 2, 8
+    chunk = 16
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    bm = jax.random.normal(ks[3], (b, s, g, n))
+    cm = jax.random.normal(ks[4], (b, s, g, n))
+
+    def loss(fn):
+        def f(x, dt, a, bm, cm):
+            y, st = fn(x, dt, a, bm, cm)
+            return jnp.sum(jnp.sin(y)) + jnp.sum(jnp.cos(st))
+        return f
+
+    g1 = jax.grad(loss(lambda *o: pl_ssd(*o, chunk, interpret=True)),
+                  argnums=(0, 1, 2, 3, 4))(x, dt, a, bm, cm)
+    g2 = jax.grad(loss(lambda *o: ssd_chunked(*o, chunk)),
+                  argnums=(0, 1, 2, 3, 4))(x, dt, a, bm, cm)
+    for got, want in zip(g1, g2):
+        np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+def test_pallas_decode_grads_match_ref():
+    # same defect class as ssd: the decode kernel's custom_vjp recomputes
+    # through ref.decode_attention; the bool valid_mask gets a float0
+    # cotangent
+    b, c, h, kv, dh = 1, 128, 4, 2, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, 1, h, dh)) * 0.5
+    kc = jax.random.normal(ks[1], (b, c, kv, dh)) * 0.5
+    vc = jax.random.normal(ks[2], (b, c, kv, dh)) * 0.5
+    valid = (jnp.arange(c) < 100)[None, :].repeat(b, 0)
+
+    def loss(fn):
+        return lambda q, kc, vc: jnp.sum(jnp.sin(fn(q, kc, vc)))
+
+    g1 = jax.grad(loss(lambda q_, k_, v_: pl_decode(
+        q_, k_, v_, valid, block_k=64, interpret=True)),
+        argnums=(0, 1, 2))(q, kc, vc)
+    g2 = jax.grad(loss(lambda q_, k_, v_: ref.decode_attention(
+        q_, k_, v_, valid)), argnums=(0, 1, 2))(q, kc, vc)
+    for got, want in zip(g1, g2):
+        np.testing.assert_allclose(got, want, atol=1e-5)
